@@ -1,0 +1,66 @@
+"""Fig 3a: application-interference speedup vs beacon threshold dn_th,
+for several cluster counts k (m=256, n=100 per app, Poisson lambda=7999)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import workloads as W
+from repro.core.sim import SimParams, run as sim_run, speedup
+
+from benchmarks.common import csv_row, save, timed
+
+KS = (1, 8, 16, 32, 256)
+THRESHOLDS = (1, 2, 4, 8, 16, 32)
+
+
+def run(verbose: bool = True, ks=KS, thresholds=THRESHOLDS,
+        sim_len: float = 4e6, seeds=(1, 2)) -> dict:
+    curves = {}
+    t_total = 0.0
+    for k in ks:
+        row = []
+        for th in thresholds:
+            vals = []
+            for seed in seeds:
+                p = SimParams(m=256, k=k, n_childs=100, dn_th=th,
+                              max_apps=512, queue_cap=2048)
+                arr, gmns, lens = W.interference(p, sim_len=sim_len, seed=seed)
+                st, dt = timed(sim_run, p, arr, gmns, lens, sim_len)
+                t_total += dt
+                s, _ = speedup(st, arr, lens)
+                vals.append(s)
+            row.append(float(np.mean(vals)))
+        curves[str(k)] = {"dn_th": list(thresholds), "speedup": row}
+
+    s1 = np.mean(curves["1"]["speedup"]) if "1" in curves else None
+    s16_th4 = (curves["16"]["speedup"][list(thresholds).index(4)]
+               if "16" in curves else None)
+    s256 = np.mean(curves["256"]["speedup"]) if "256" in curves else None
+    improvement_16 = float(s16_th4 / s1) if s1 and s16_th4 else None
+    improvement_256 = float(s256 / s1) if s1 and s256 else None
+    # robustness: clustered speedup stays flat while dn_th < m/k
+    robust = True
+    if "16" in curves:
+        r = curves["16"]["speedup"]
+        small = [v for v, t in zip(r, thresholds) if t < 256 // 16]
+        robust = (max(small) - min(small)) / max(small) < 0.2
+    payload = {
+        "curves": curves,
+        "improvement_k16_vs_k1": improvement_16,
+        "improvement_k256_vs_k1": improvement_256,
+        "paper_claim": {"k16_th4_vs_k1": 2.8, "k256_vs_k1": 1.6,
+                        "robust_below_pes_per_cluster": True},
+        "claim_k16_band": improvement_16 is not None
+                          and 2.0 <= improvement_16 <= 3.6,
+        "claim_robust": robust,
+    }
+    save("fig3a", payload)
+    if verbose:
+        csv_row("fig3a_interference", t_total * 1e6,
+                f"k16/k1={improvement_16:.2f}|k256/k1={improvement_256:.2f}"
+                f"|robust={robust}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Fig 3b: transmitted status beacons vs threshold dn_th for several k.
+
+Paper claim: at dn_th=4, k=32 transmits ~1.37x the beacons of k=16; a
+coarser threshold suppresses synchronization traffic."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import workloads as W
+from repro.core.sim import SimParams, run as sim_run
+
+from benchmarks.common import csv_row, save, timed
+
+KS = (8, 16, 32, 64)
+THRESHOLDS = (1, 2, 4, 8, 16, 32)
+
+
+def run(verbose: bool = True, ks=KS, thresholds=THRESHOLDS,
+        sim_len: float = 4e6, seed: int = 1) -> dict:
+    curves = {}
+    t_total = 0.0
+    for k in ks:
+        row = []
+        for th in thresholds:
+            p = SimParams(m=256, k=k, n_childs=100, dn_th=th,
+                          max_apps=512, queue_cap=2048)
+            arr, gmns, lens = W.interference(p, sim_len=sim_len, seed=seed)
+            st, dt = timed(sim_run, p, arr, gmns, lens, sim_len)
+            t_total += dt
+            row.append(int(st["beacons_tx"]))
+        curves[str(k)] = {"dn_th": list(thresholds), "beacons_tx": row}
+
+    i4 = list(thresholds).index(4)
+    ratio = (curves["32"]["beacons_tx"][i4] / curves["16"]["beacons_tx"][i4]
+             if "32" in curves and "16" in curves else None)
+    monotone = all(
+        all(c["beacons_tx"][i] >= c["beacons_tx"][i + 1]
+            for i in range(len(thresholds) - 1))
+        for c in curves.values())
+    payload = {
+        "curves": curves,
+        "ratio_k32_over_k16_at_th4": float(ratio) if ratio else None,
+        "paper_claim": {"ratio_k32_over_k16_at_th4": 1.37,
+                        "beacons_decrease_with_threshold": True},
+        "claim_ratio_band": ratio is not None and 1.1 <= ratio <= 1.7,
+        "claim_monotone": monotone,
+    }
+    save("fig3b", payload)
+    if verbose:
+        csv_row("fig3b_beacons", t_total * 1e6,
+                f"k32/k16@th4={ratio:.2f}|monotone={monotone}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from dry-run JSON.
+
+    PYTHONPATH=src:. python -m benchmarks.roofline_report \\
+        [--json results/dryrun_final.json] [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def render(path: str, mesh: str = "16x16") -> str:
+    rows = json.load(open(path))
+    ok = [r for r in rows if r.get("status") == "ok" and r["mesh"] == mesh]
+    skipped = [r for r in rows if r.get("status") == "skipped"]
+    out = []
+    out.append(f"Mesh {mesh} — {len(ok)} cells (+{len(skipped)} documented "
+               f"skips). Terms are per-chip seconds; bottleneck = max term.")
+    out.append("")
+    hdr = (f"| {'cell':36s} | mb | {'compute s':>9s} | {'memory s':>9s} | "
+           f"{'collect s':>9s} | bound | roofl% | useful% | peak GB | fits |")
+    out.append(hdr)
+    out.append("|" + "-" * (len(hdr) - 2) + "|")
+    for r in sorted(ok, key=lambda r: r["cell"]):
+        out.append(
+            f"| {r['cell']:36s} | {r.get('microbatches', 1):2d} "
+            f"| {r['t_compute_s']:9.3f} | {r['t_memory_s']:9.3f} "
+            f"| {r['t_collective_s']:9.3f} | {r['bottleneck'][:5]:5s} "
+            f"| {100 * r['roofline_fraction']:6.2f} "
+            f"| {100 * r['useful_flops_ratio']:7.1f} "
+            f"| {r['peak_bytes_per_chip'] / 1e9:7.2f} "
+            f"| {'yes' if r['fits_16gb'] else 'NO':4s} |")
+    for r in skipped:
+        out.append(f"| {r['cell']:36s} | SKIPPED: {r.get('reason','')} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="results/dryrun_final.json")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    print(render(args.json, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Benchmark runner: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows and writes JSON payloads to
+results/.  The roofline table (EXPERIMENTS.md §Roofline) comes from the
+separate 512-device dry-run (python -m repro.launch.dryrun --all), which
+must run in its own process because of XLA_FLAGS.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import fig2a, fig2b, fig3a, fig3b, table5
+    from benchmarks import moe_balance, scheduler_overhead
+
+    print("name,us_per_call,derived")
+    ok = True
+    fig2a.run()
+    b = fig2b.run()
+    ok &= b["fit_ok"]
+    a = fig3a.run()
+    ok &= a["claim_k16_band"]
+    bb = fig3b.run()
+    ok &= bb["claim_monotone"]
+    t = table5.run()
+    ok &= t["ordering_clustered_best"]
+    scheduler_overhead.run()
+    moe_balance.run()
+    print(f"# paper-claim checks {'PASS' if ok else 'FAIL'}")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Software analogue of paper Table 4 (GMN area/clock): the per-decision
+cost of the two-stage mapper in this framework's scheduler, vs a flat
+argmin over all m units, across cluster counts k.
+
+Also reports decisions/second for the batched kernel path (the serving
+engine's hot loop)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+from benchmarks.common import csv_row, save
+
+
+def _bench(fn, *args, iters=20):
+    fn(*args)                                 # compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def run(verbose: bool = True, m: int = 256, n_tasks: int = 100) -> dict:
+    rows = {}
+    costs = jnp.ones((n_tasks,), jnp.float32)
+
+    @jax.jit
+    def flat_assign(loads_flat, costs):
+        def step(loads, c):
+            i = jnp.argmin(loads)
+            return loads.at[i].add(c), i
+        return jax.lax.scan(step, loads_flat, costs)
+
+    flat = jnp.zeros((m,), jnp.float32)
+    t_flat = _bench(flat_assign, flat, costs)
+
+    for k in (1, 8, 16, 32, 256):
+        loads = jnp.zeros((k, m // k), jnp.float32)
+        t = _bench(lambda l=loads: ops.assign_tasks(l, costs))
+        rows[str(k)] = {"us_per_batch": t * 1e6,
+                        "us_per_decision": t * 1e6 / n_tasks}
+    payload = {
+        "two_stage": rows,
+        "flat_argmin_us_per_batch": t_flat * 1e6,
+        "note": "paper Table 4 is 65nm silicon area (out of scope); this is "
+                "the software scheduler's decision latency on this host",
+    }
+    save("scheduler_overhead", payload)
+    if verbose:
+        csv_row("scheduler_overhead",
+                rows["16"]["us_per_batch"],
+                f"us_per_decision_k16={rows['16']['us_per_decision']:.2f}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Reproduce the paper's headline numbers in one command.
+
+    PYTHONPATH=src:. python examples/paper_repro.py [--fast]
+
+Runs the analytic model (Fig 2a), the TLM simulation for a k-sweep with
+interference (Fig 3a / Table 5) and the beacon-count analysis (Fig 3b),
+printing measured-vs-paper values.
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import analytic as A
+from repro.core import workloads as W
+from repro.core.sim import SimParams, run as sim_run, speedup
+
+PAPER_T5 = {1: 28.1, 8: 73.5, 16: 78.7, 256: 44.3}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="shorter sim (noisier numbers)")
+    args = ap.parse_args()
+    sim_len = 1e6 if args.fast else 4e6
+
+    print("== Fig 2a (analytic): optimal cluster count ==")
+    for cs in (1.0, 8.0, 64.0):
+        k = A.optimal_k(256, 256, A.TimingParams(c_s=cs))
+        print(f"  c_s={cs:5.1f}: optimal k = {k}   (paper: 32-64 for the "
+              f"recursive startup)")
+
+    print("== Table 5 (TLM simulation, interference) ==")
+    ours = {}
+    for k in PAPER_T5:
+        p = SimParams(m=256, k=k, n_childs=100, dn_th=4, max_apps=512,
+                      queue_cap=2048)
+        arr, gmns, lens = W.interference(p, sim_len=sim_len, seed=1)
+        st = sim_run(p, arr, gmns, lens, sim_len)
+        s, n = speedup(st, arr, lens)
+        ours[k] = s
+        print(f"  k={k:3d}: ours={s:6.1f}  paper={PAPER_T5[k]:5.1f}  "
+              f"(apps={n}, beacons={int(st['beacons_tx'])})")
+    print(f"  ratio k16/k1: ours={ours[16]/ours[1]:.2f}  "
+          f"paper={PAPER_T5[16]/PAPER_T5[1]:.2f}")
+
+    print("== Fig 3b (beacon traffic vs threshold) ==")
+    for k in (16, 32):
+        row = []
+        for th in (1, 4, 16):
+            p = SimParams(m=256, k=k, n_childs=100, dn_th=th, max_apps=512,
+                          queue_cap=2048)
+            arr, gmns, lens = W.interference(p, sim_len=sim_len, seed=1)
+            st = sim_run(p, arr, gmns, lens, sim_len)
+            row.append(int(st["beacons_tx"]))
+        print(f"  k={k}: beacons @ dn_th in (1,4,16) = {row}")
+
+
+if __name__ == "__main__":
+    main()

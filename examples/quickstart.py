@@ -1,0 +1,67 @@
+"""Quickstart: build an architecture, run forward/loss/train-step/decode.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch glm4_9b]
+
+Uses the reduced (CPU-sized) config of the chosen architecture; the full
+published config is exercised by the 512-device dry-run
+(`python -m repro.launch.dryrun --arch glm4_9b --shape train_4k`).
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import RunConfig, get_config, reduced_config
+from repro.launch.steps import make_train_step
+from repro.models import model as MDL
+from repro.optim import optimizer as OPT
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4_9b")
+    args = ap.parse_args()
+
+    full = get_config(args.arch)
+    cfg = reduced_config(full)
+    print(f"arch={full.name}: {full.param_count()/1e9:.2f}B params "
+          f"(reduced for CPU: {cfg.n_layers}L d={cfg.d_model})")
+
+    key = jax.random.PRNGKey(0)
+    params = MDL.init_model(key, cfg, jnp.float32)
+    B, S = 2, 32
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    extra = {}
+    if cfg.frontend == "vision":
+        extra["patches"] = jnp.zeros((B, cfg.vision_tokens, cfg.d_model))
+    if cfg.family == "encdec":
+        extra["frames"] = jnp.zeros((B, cfg.enc_seq_len, cfg.d_model))
+
+    logits, _ = MDL.forward(params, cfg, tokens, extra=extra, remat="none")
+    print("forward:", logits.shape)
+
+    run = RunConfig(param_dtype="float32", total_steps=10, warmup_steps=1)
+    step = jax.jit(make_train_step(cfg, run))
+    opt = OPT.init_opt_state(params, run)
+    batch = {"tokens": tokens, "labels": tokens, **extra}
+    for i in range(3):
+        params, opt, metrics = step(params, opt, batch)
+        print(f"train step {i}: loss={float(metrics['loss']):.4f}")
+
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = MDL._encode(params, cfg, extra["frames"], remat="none")
+    cache = MDL.init_cache(cfg, B, 16, jnp.float32, enc_out=enc_out,
+                           params=params)
+    tok = tokens[:, :1]
+    out = [int(tok[0, 0])]
+    for pos in range(8):
+        logits, cache = MDL.decode_step(params, cfg, cache, tok,
+                                        jnp.int32(pos))
+        tok = logits[:, -1:].argmax(-1).astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    print("decoded token ids:", out)
+
+
+if __name__ == "__main__":
+    main()

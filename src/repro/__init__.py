@@ -1,0 +1,3 @@
+"""repro: clustered hierarchical task management for multi-pod JAX systems."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,14 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS,
+    ModelConfig,
+    MoEConfig,
+    RunConfig,
+    SHAPES,
+    SSMConfig,
+    ShapeConfig,
+    all_configs,
+    get_config,
+    reduced_config,
+    register,
+    shape_supported,
+)

@@ -1,0 +1,1 @@
+"""Paper core: messages, analytic model, two-stage mapping, beacons, TLM sim."""

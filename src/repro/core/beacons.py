@@ -1,0 +1,49 @@
+"""Threshold-based status communication (paper Sec 4.2).
+
+A node broadcasts its summarized load whenever it drifted >= dn_th from the
+last broadcast value.  Pure-functional state machine used by the TLM sim
+(inlined there for tick accounting) and by the serving engine's cluster
+schedulers (wall-clock domain).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class BeaconState:
+    k: int
+    dn_th: int
+    last_bcast: np.ndarray        # (k,) value at last broadcast per node
+    view: np.ndarray              # (k, k) view[i, j] = node i's view of j
+    tx_count: int = 0
+
+    @classmethod
+    def create(cls, k: int, dn_th: int):
+        return cls(k=k, dn_th=dn_th,
+                   last_bcast=np.zeros(k, np.int64),
+                   view=np.zeros((k, k), np.int64))
+
+
+def update(state: BeaconState, node: int, load: int) -> BeaconState:
+    """Node reports its current load; broadcast fires on threshold drift."""
+    view = state.view.copy()
+    view[node, node] = load                      # own view is always exact
+    if abs(int(load) - int(state.last_bcast[node])) >= state.dn_th \
+            and state.k > 1:
+        last = state.last_bcast.copy()
+        last[node] = load
+        view[:, node] = load                     # all remotes receive
+        return replace(state, view=view, last_bcast=last,
+                       tx_count=state.tx_count + 1)
+    return replace(state, view=view)
+
+
+def staleness(state: BeaconState, true_loads: np.ndarray) -> float:
+    """Mean |view - truth| over remote entries — the information deficit the
+    paper identifies as the cause of mis-mapping (Sec 6)."""
+    err = np.abs(state.view - true_loads[None, :]).astype(np.float64)
+    off_diag = ~np.eye(state.k, dtype=bool)
+    return float(err[off_diag].mean()) if state.k > 1 else 0.0

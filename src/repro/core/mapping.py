@@ -1,0 +1,58 @@
+"""Two-stage hierarchical task mapping (paper Sec 4.1) — framework-facing API.
+
+The TLM simulator inlines this logic for tick accounting; the serving engine
+and launcher consume it through this module.  `assign_tasks` dispatches to
+the Pallas kernel on TPU (kernels/hier_minsearch.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+@dataclass
+class MapperState:
+    """k clusters x m/k units; `view` holds beacon-synced remote summaries."""
+    loads: jnp.ndarray            # (k, m_per_k) exact local loads
+    view: jnp.ndarray             # (k,) per-cluster summaries (possibly stale)
+
+    @classmethod
+    def create(cls, k: int, m_per_k: int):
+        return cls(loads=jnp.zeros((k, m_per_k), jnp.float32),
+                   view=jnp.zeros((k,), jnp.float32))
+
+
+def map_one(state: MapperState, cost: float = 1.0):
+    """One two-stage decision: returns ((cluster, unit), new state)."""
+    assigns, new_loads = ops.assign_tasks(
+        state.loads, jnp.asarray([cost], jnp.float32))
+    c, u = int(assigns[0, 0]), int(assigns[0, 1])
+    return (c, u), MapperState(loads=new_loads,
+                               view=new_loads.sum(axis=1))
+
+
+def map_batch(state: MapperState, costs):
+    """Map a batch of tasks sequentially (the paper's FCFS order)."""
+    costs = jnp.asarray(costs, jnp.float32)
+    assigns, new_loads = ops.assign_tasks(state.loads, costs)
+    return assigns, MapperState(loads=new_loads, view=new_loads.sum(axis=1))
+
+
+def stage1_pick(view, start: int = 0):
+    """Cluster choice by min-search over (stale) per-cluster summaries,
+    tie-broken starting at `start` (the searching node's own index)."""
+    k = view.shape[0]
+    perm = (np.arange(k) + start) % k
+    return int(perm[int(np.argmin(np.asarray(view)[perm]))])
+
+
+def fork_tree_targets(n_tasks: int, k: int, m_per_k: int):
+    """Recursive-spawn stop rule (Sec 4.1): number of cluster targets and
+    fork-tree depth for n_tasks childs."""
+    ns = min(k, max(1, -(-n_tasks // m_per_k)))
+    depth = int(np.ceil(np.log2(ns))) if ns > 1 else 0
+    return ns, depth

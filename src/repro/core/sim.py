@@ -1,0 +1,297 @@
+"""Event-driven transaction-level simulator of the clustered task manager.
+
+Faithful JAX re-implementation of the paper's TLM evaluation (Sec 5):
+
+  entities   k GMNs (serialized mapping compute, c_s per decision level),
+             m PEs with FCFS queues, one global bus, k local buses
+             (c_b per message, serialized per bus),
+  mechanisms two-stage recursive task mapping (Sec 4.1), threshold-based
+             status beacons (Sec 4.2, threshold dn_th), join/barrier
+             synchronization (Tab 2).
+
+All state lives in fixed-shape arrays; the run is one ``lax.while_loop``
+over a bounded event queue, so a full interference experiment jits once and
+sweeps (k, dn_th) via vmap-free re-jit per static config.
+
+Event types:
+  ARRIVE(app)             application hits its stimulus GMN; the GMN expands
+                          the recursive fork tree (stage-1 decisions over its
+                          beacon view) and emits LOCAL_SPAWN messages.
+  LOCAL_SPAWN(app, g, n)  cluster g maps n child tasks onto its PEs
+                          (stage-2 min-search, exact local view), one
+                          decision + one local-bus task-start per child.
+  JOIN_EXIT(app, g, p)    child finished: local-bus join-exit message,
+                          barrier decrement, load decrement, beacon check.
+
+Deviations from the paper (documented in DESIGN.md §8): helper tasks occupy
+the management plane (GMN time) rather than PEs; per-receiver beacon skew is
+ignored (view updates atomically at bus-grant time).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INF = jnp.float32(1e18)
+
+EV_ARRIVE = 0
+EV_LOCAL_SPAWN = 1
+EV_JOIN_EXIT = 2
+
+
+@dataclass(frozen=True)
+class SimParams:
+    m: int = 256                 # processing elements
+    k: int = 16                  # global management nodes (clusters)
+    c_b: float = 8.0             # message delay (4 tx + 4 rx), bus-serialized
+    c_s: float = 8.0             # selection delay coefficient
+    c_join: float = 8.0          # GMN barrier-decrement processing
+    dn_th: int = 4               # beacon threshold
+    n_childs: int = 100          # child tasks per application
+    queue_cap: int = 2048
+    max_apps: int = 512
+
+    @property
+    def mpk(self) -> int:
+        return self.m // self.k
+
+    @property
+    def sel_global(self) -> float:
+        """Stage-1 decision cost c_s * log2(k)."""
+        return float(self.c_s * np.log2(max(self.k, 2))) if self.k > 1 else 0.0
+
+    @property
+    def sel_local(self) -> float:
+        """Stage-2 decision cost c_s * log2(m/k)."""
+        return float(self.c_s * np.log2(max(self.mpk, 2))) if self.mpk > 1 else 0.0
+
+
+def make_state(p: SimParams):
+    k, mpk, Q, A = p.k, p.mpk, p.queue_cap, p.max_apps
+    return {
+        # event queue (slot-recycled)
+        "ev_time": jnp.full((Q,), INF),
+        "ev_type": jnp.zeros((Q,), jnp.int32),
+        "ev_a": jnp.zeros((Q, 3), jnp.int32),      # (app, gmn/cluster, pe/cnt)
+        # infra
+        "pe_free": jnp.zeros((k, mpk), jnp.float32),
+        "gmn_free": jnp.zeros((k,), jnp.float32),
+        "gbus_free": jnp.zeros((), jnp.float32),
+        "lbus_free": jnp.zeros((k,), jnp.float32),
+        # load bookkeeping
+        "loads": jnp.zeros((k, mpk), jnp.int32),   # mapped tasks per PE
+        "view": jnp.zeros((k, k), jnp.int32),      # GMN g's view of cluster c
+        "last_bcast": jnp.zeros((k,), jnp.int32),
+        "beacons_tx": jnp.zeros((), jnp.int32),
+        # applications
+        "app_remaining": jnp.zeros((A,), jnp.int32),
+        "app_arrive": jnp.full((A,), INF),
+        "app_done": jnp.full((A,), INF),
+        "events_processed": jnp.zeros((), jnp.int32),
+        "dropped": jnp.zeros((), jnp.int32),
+    }
+
+
+def _push(st, t, typ, a0, a1, a2):
+    slot = jnp.argmax(st["ev_time"] >= INF)       # first free slot
+    ok = st["ev_time"][slot] >= INF
+    st = dict(st)
+    st["ev_time"] = st["ev_time"].at[slot].set(jnp.where(ok, t, st["ev_time"][slot]))
+    st["ev_type"] = st["ev_type"].at[slot].set(jnp.where(ok, typ, st["ev_type"][slot]))
+    st["ev_a"] = st["ev_a"].at[slot].set(
+        jnp.where(ok, jnp.stack([a0, a1, a2]), st["ev_a"][slot]))
+    st["dropped"] = st["dropped"] + jnp.where(ok, 0, 1)
+    return st
+
+
+def _maybe_beacon(st, p: SimParams, g, t):
+    """Threshold-based status broadcast (Sec 4.2)."""
+    load_g = st["loads"][g].sum()
+    delta = jnp.abs(load_g - st["last_bcast"][g])
+    fire = jnp.logical_and(delta >= p.dn_th, p.k > 1)
+    # bus grant: serialize on the global bus
+    t_tx = jnp.maximum(t, st["gbus_free"]) + p.c_b
+    st = dict(st)
+    st["gbus_free"] = jnp.where(fire, t_tx, st["gbus_free"])
+    st["view"] = jnp.where(fire, st["view"].at[:, g].set(load_g), st["view"])
+    st["last_bcast"] = jnp.where(fire, st["last_bcast"].at[g].set(load_g),
+                                 st["last_bcast"])
+    st["beacons_tx"] = st["beacons_tx"] + jnp.where(fire, 1, 0)
+    return st
+
+
+def _handle_arrive(st, p: SimParams, t, app, g, _unused, lengths):
+    """Stage 1: expand the fork tree at GMN g, fan out LOCAL_SPAWN msgs."""
+    k, n = p.k, p.n_childs
+    ns = int(min(k, max(1, -(-n // p.mpk))))      # cluster targets (static)
+    depth = int(np.ceil(np.log2(ns))) if ns > 1 else 0
+    share = n // ns
+    rem = n - share * ns
+
+    # GMN compute: the critical path of the binary fork tree does
+    # 2 stage-1 decisions per level (paper Eqn 3: log(n) * Omega_s(k)).
+    t_cpu = jnp.maximum(t, st["gmn_free"][g])
+    t_tree = t_cpu + 2.0 * depth * p.sel_global
+    st = dict(st)
+    st["gmn_free"] = st["gmn_free"].at[g].set(t_tree)
+
+    # own cluster count is exact (local data structure); remote via beacons
+    own_view = st["view"][g].at[g].set(st["loads"][g].sum())
+    # ties break starting from the searching GMN's own index (models the
+    # hardware min-search starting at the local node) so identical stale
+    # views at different GMNs don't all pick cluster 0
+    perm = jnp.mod(jnp.arange(p.k) + g, p.k)
+
+    def pick(carry, i):
+        view, st_gbus = carry
+        c = perm[jnp.argmin(view[perm])]           # stage-1 min-search
+        cnt = share + jnp.where(i < rem, 1, 0)
+        view = view.at[c].add(cnt)                 # optimistic local bookkeeping
+        # task-start message over the global bus (serialized, c_b each);
+        # a self-targeted spawn skips the bus
+        is_remote = c != g
+        t_bus = jnp.maximum(t_tree, st_gbus) + p.c_b
+        st_gbus = jnp.where(is_remote, t_bus, st_gbus)
+        t_arr = jnp.where(is_remote, t_bus, t_tree)
+        return (view, st_gbus), (c, cnt, t_arr)
+
+    (new_view, gbus), (cs, cnts, t_arrs) = jax.lax.scan(
+        pick, (own_view, st["gbus_free"]), jnp.arange(ns))
+    st["view"] = st["view"].at[g].set(new_view)
+    st["gbus_free"] = gbus
+    st["app_remaining"] = st["app_remaining"].at[app].set(n)
+    st["app_arrive"] = st["app_arrive"].at[app].set(t)
+
+    def push_one(st, i):
+        return _push(st, t_arrs[i], EV_LOCAL_SPAWN, app, cs[i], cnts[i]), None
+
+    st, _ = jax.lax.scan(push_one, st, jnp.arange(ns))
+    return st
+
+
+def _handle_local_spawn(st, p: SimParams, t, app, g, cnt, lengths):
+    """Stage 2: GMN g maps cnt childs onto its PEs (exact local view)."""
+    mpk, n_max = p.mpk, p.n_childs
+    st = dict(st)
+
+    def spawn(carry, i):
+        t_cpu, lbus, pe_free, loads = carry
+        active = i < cnt
+        t_cpu = t_cpu + jnp.where(active, p.sel_local, 0.0)
+        pe = jnp.argmin(loads)                     # stage-2 min-search
+        # task-start over the local bus
+        t_msg = jnp.maximum(t_cpu, lbus) + p.c_b
+        lbus = jnp.where(active, t_msg, lbus)
+        start = jnp.maximum(t_msg, pe_free[pe])
+        ln = lengths[app, i]
+        finish = start + ln
+        pe_free = jnp.where(active, pe_free.at[pe].set(finish), pe_free)
+        loads = jnp.where(active, loads.at[pe].add(1), loads)
+        return (t_cpu, lbus, pe_free, loads), (pe, finish, active)
+
+    t0 = jnp.maximum(t, st["gmn_free"][g])
+    (t_cpu, lbus, pe_free, loads), (pes, finishes, actives) = jax.lax.scan(
+        spawn, (t0, st["lbus_free"][g], st["pe_free"][g], st["loads"][g]),
+        jnp.arange(n_max))
+    st["gmn_free"] = st["gmn_free"].at[g].set(t_cpu)
+    st["lbus_free"] = st["lbus_free"].at[g].set(lbus)
+    st["pe_free"] = st["pe_free"].at[g].set(pe_free)
+    st["loads"] = st["loads"].at[g].set(loads)
+
+    st = _maybe_beacon(st, p, g, t_cpu)
+
+    def push_exit(st, i):
+        return jax.lax.cond(
+            actives[i],
+            lambda s: _push(s, finishes[i], EV_JOIN_EXIT, app, g, pes[i]),
+            lambda s: s, st), None
+
+    st, _ = jax.lax.scan(push_exit, st, jnp.arange(n_max))
+    return st
+
+
+def _handle_join_exit(st, p: SimParams, t, app, g, pe, lengths, parent_gmns):
+    st = dict(st)
+    # join-exit message over the local bus of the child's cluster
+    t_msg = jnp.maximum(t, st["lbus_free"][g]) + p.c_b
+    st["lbus_free"] = st["lbus_free"].at[g].set(t_msg)
+    st["loads"] = st["loads"].at[g, pe].add(-1)
+    st = _maybe_beacon(st, p, g, t_msg)
+    # the join barrier lives at the application's arrival GMN: remote
+    # join-exits forward over the global bus (Tab 2 / Sec 4)
+    pg = parent_gmns[app]
+    remote = pg != g
+    t_fwd = jnp.where(remote,
+                      jnp.maximum(t_msg, st["gbus_free"]) + p.c_b, t_msg)
+    st["gbus_free"] = jnp.where(remote, t_fwd, st["gbus_free"])
+    t_bar = jnp.maximum(t_fwd, st["gmn_free"][pg]) + p.c_join
+    st["gmn_free"] = st["gmn_free"].at[pg].set(t_bar)
+    rem = st["app_remaining"][app] - 1
+    st["app_remaining"] = st["app_remaining"].at[app].set(rem)
+    st["app_done"] = jnp.where(
+        rem == 0, st["app_done"].at[app].set(t_bar), st["app_done"])
+    return st
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def run(p: SimParams, arrivals, arrival_gmns, lengths, sim_len: float = 1e7):
+    """arrivals (A,) f32 times (INF = unused); arrival_gmns (A,) i32;
+    lengths (A, n_childs) f32 child task lengths.
+
+    Returns final state dict (response times = app_done - app_arrive).
+    """
+    st = make_state(p)
+
+    def seed(st, i):
+        return jax.lax.cond(
+            arrivals[i] < sim_len,
+            lambda s: _push(s, arrivals[i], EV_ARRIVE, i, arrival_gmns[i], 0),
+            lambda s: s, st), None
+
+    st, _ = jax.lax.scan(seed, st, jnp.arange(arrivals.shape[0]))
+
+    def cond(st):
+        return st["ev_time"].min() < INF
+
+    def body(st):
+        slot = jnp.argmin(st["ev_time"])
+        t = st["ev_time"][slot]
+        typ = st["ev_type"][slot]
+        a = st["ev_a"][slot]
+        st = dict(st)
+        st["ev_time"] = st["ev_time"].at[slot].set(INF)   # recycle slot
+        st["events_processed"] = st["events_processed"] + 1
+        st = jax.lax.switch(
+            typ,
+            [lambda s: _handle_arrive(s, p, t, a[0], a[1], a[2], lengths),
+             lambda s: _handle_local_spawn(s, p, t, a[0], a[1], a[2], lengths),
+             lambda s: _handle_join_exit(s, p, t, a[0], a[1], a[2], lengths,
+                                         arrival_gmns)],
+            st)
+        return st
+
+    return jax.lax.while_loop(cond, body, st)
+
+
+# --------------------------------------------------------------------------
+# Metrics
+# --------------------------------------------------------------------------
+
+def response_times(final_state, arrivals):
+    done = np.asarray(final_state["app_done"])
+    arr = np.asarray(final_state["app_arrive"])
+    ok = (done < 1e17) & (arr < 1e17)
+    return (done - arr)[ok], ok
+
+
+def speedup(final_state, arrivals, lengths):
+    """S = t_seq / t_par, paper Sec 5; only completed apps count."""
+    tr, ok = response_times(final_state, arrivals)
+    if len(tr) == 0:
+        return float("nan"), 0
+    seq = np.asarray(lengths).sum(axis=1)[ok[: lengths.shape[0]]]
+    return float(np.mean(seq / tr)), int(len(tr))

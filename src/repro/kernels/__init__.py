@@ -1,0 +1,1 @@
+"""Pallas TPU kernels + XLA fallbacks.  See ops.py for the public API."""

@@ -1,0 +1,122 @@
+"""Pure-jnp oracles for every kernel.  Small-shape, numerically transparent.
+
+These are the correctness ground truth for the Pallas kernels (swept in
+``tests/test_kernels_*``) and the default execution path on small shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, sliding_window=0):
+    """Naive softmax attention.  q (B,Sq,Hq,D); k,v (B,Skv,Hkv,D) with GQA."""
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    qf = q.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(B, Hkv, G, Sq, D)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)   # align ends (prefill continuation)
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if sliding_window:
+        mask &= (qpos - kpos) < sliding_window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(B, Hkv * G, Sq, D).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def decode_attention_ref(q, cache_k, cache_v, pos, *, lengths=None,
+                         sliding_window=0):
+    """One-step decode.  q (B,1,Hq,D); cache (B,S,Hkv,D); pos scalar int.
+
+    Attends to cache positions <= pos (the current token's k/v must already
+    be written at index ``pos``).  ``lengths`` (B,) optionally overrides pos
+    per batch row (continuous batching).
+    """
+    B, S, Hkv, D = cache_k.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, D)
+    kf = cache_k.astype(jnp.float32).transpose(0, 2, 1, 3)   # (B,Hkv,S,D)
+    vf = cache_v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qf, kf) * scale        # (B,Hkv,G,S)
+    kpos = jnp.arange(S)
+    limit = (lengths[:, None] if lengths is not None
+             else jnp.full((B, 1), pos))                     # inclusive index
+    valid = kpos[None, :] <= limit                           # (B,S)
+    if sliding_window:
+        valid &= kpos[None, :] > (limit - sliding_window)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, vf)
+    return o.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+def selective_scan_ref(x, dt, A, Bc, Cc, D_skip):
+    """Mamba-1 selective scan, naive sequential oracle.
+
+    x, dt: (B,S,Di);  A: (Di,N);  Bc, Cc: (B,S,N);  D_skip: (Di,)
+    returns y (B,S,Di).
+    """
+    Bsz, S, Di = x.shape
+    N = A.shape[1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = Bc.astype(jnp.float32), Cc.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                       # (B,Di),(B,Di),(B,N),(B,N)
+        da = jnp.exp(dtt[..., None] * Af[None])     # (B,Di,N)
+        dbx = (dtt * xt)[..., None] * bt[:, None, :]
+        h = da * h + dbx
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, Di, N), jnp.float32)
+    xs = (xf.transpose(1, 0, 2), dtf.transpose(1, 0, 2),
+          Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + xf * D_skip.astype(jnp.float32)[None, None]
+    return y.astype(x.dtype)
+
+
+def ssm_decode_ref(h, x, dt, A, Bc, Cc, D_skip):
+    """Single decode step of the selective scan.  h (B,Di,N) carries state."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    da = jnp.exp(dtf[..., None] * A.astype(jnp.float32)[None])
+    dbx = (dtf * xf)[..., None] * Bc.astype(jnp.float32)[:, None, :]
+    h = da * h + dbx
+    y = jnp.einsum("bdn,bn->bd", h, Cc.astype(jnp.float32))
+    y = y + xf * D_skip.astype(jnp.float32)[None]
+    return h, y.astype(x.dtype)
+
+
+def hier_minsearch_ref(loads):
+    """Two-stage mapping decision: loads (k, m_per_k) -> (cluster, pe)."""
+    cluster = jnp.argmin(loads.sum(axis=1))
+    pe = jnp.argmin(loads[cluster])
+    return cluster, pe
+
+
+def assign_tasks_ref(loads, costs):
+    """Sequentially map T tasks by two-stage min-search (the paper's mapper).
+
+    loads (k, m_per_k) float32; costs (T,) float32.
+    Returns (assignments (T,2) int32, final loads).
+    """
+    def step(loads, cost):
+        c, p = hier_minsearch_ref(loads)
+        loads = loads.at[c, p].add(cost)
+        return loads, jnp.stack([c, p]).astype(jnp.int32)
+
+    loads, assigns = jax.lax.scan(step, loads.astype(jnp.float32), costs)
+    return assigns, loads

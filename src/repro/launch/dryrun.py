@@ -1,0 +1,138 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "")
+    # 512 placeholder host devices for the production meshes (dry-run only).
+    + " --xla_force_host_platform_device_count=512"
+    # CPU-backend artifact: WLICM hoists bf16->f32 converts of remat-saved
+    # scan residuals out of the backward while, materializing a duplicate
+    # f32 residual stack (+10GB/chip on qwen2-72b).  The TPU backend keeps
+    # native bf16 dots and never creates these converts.  See §Perf.
+    + " --xla_disable_hlo_passes=while-loop-invariant-code-motion").strip()
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+#
+# Proves the distribution config is coherent without hardware: the 16x16
+# single-pod mesh and the 2x16x16 multi-pod mesh must compile for every
+# supported cell; memory_analysis() proves HBM fit; cost_analysis() + the HLO
+# collective parse feed EXPERIMENTS.md §Dry-run / §Roofline.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch qwen2_72b --shape train_4k --mesh single
+#   python -m repro.launch.dryrun --all --out results/dryrun.json
+# (XLA_FLAGS is set on the first two lines, before any jax import.)
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import (RunConfig, SHAPES, all_configs,
+                                shape_supported)
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell, lower_cell
+
+
+def run_cell(cfg, shape, *, multi_pod: bool, run: RunConfig,
+             verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    # trainer auto-picks gradient-accumulation depth to fit 16GB HBM
+    mb_candidates = (run.microbatches, run.microbatches * 2,
+                     run.microbatches * 4, run.microbatches * 8) \
+        if shape.kind == "train" else (1,)
+    info = None
+    for mb in mb_candidates:
+        import dataclasses
+        run_mb = dataclasses.replace(run, microbatches=mb) \
+            if shape.kind == "train" else run
+        cell = build_cell(cfg, shape, mesh, run_mb, multi_pod=multi_pod)
+        with mesh:
+            lowered = lower_cell(cell)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            info = RL.analyze(compiled, cfg, shape, n_chips)
+        info["microbatches"] = mb
+        if info["fits_16gb"]:
+            break
+        jax.clear_caches()
+    info.update({
+        "cell": cell.name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "status": "ok",
+    })
+    if verbose:
+        print(f"[dryrun] {cell.name} mesh={info['mesh']}: "
+              f"compute={info['t_compute_s']*1e3:.2f}ms "
+              f"memory={info['t_memory_s']*1e3:.2f}ms "
+              f"collective={info['t_collective_s']*1e3:.2f}ms "
+              f"bottleneck={info['bottleneck']} "
+              f"peak={info['peak_bytes_per_chip']/1e9:.2f}GB "
+              f"fits16GB={info['fits_16gb']} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)", flush=True)
+    return info
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--layout", default="tp_fsdp",
+                    choices=["tp_fsdp", "zero3", "sp"])
+    args = ap.parse_args()
+
+    run = RunConfig(remat=args.remat, microbatches=args.microbatches,
+                    layout=args.layout)
+    cfgs = all_configs()
+    archs = [args.arch] if args.arch else list(cfgs)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    failures = 0
+    for arch in archs:
+        cfg = cfgs[arch.replace("-", "_")]
+        for shp in shapes:
+            shape = SHAPES[shp]
+            if not shape_supported(cfg, shape):
+                results.append({"cell": f"{cfg.name}/{shape.name}",
+                                "status": "skipped",
+                                "reason": "full attention cannot serve 500k ctx"})
+                print(f"[dryrun] {cfg.name}/{shape.name}: SKIP (unsupported)",
+                      flush=True)
+                continue
+            for mp in meshes:
+                try:
+                    results.append(run_cell(cfg, shape, multi_pod=mp, run=run))
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    failures += 1
+                    traceback.print_exc()
+                    results.append({
+                        "cell": f"{cfg.name}/{shape.name}",
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": "fail", "error": f"{type(e).__name__}: {e}"})
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+                jax.clear_caches()
+    ok = sum(1 for r in results if r.get("status") == "ok")
+    print(f"[dryrun] done: {ok} ok, {failures} failed, "
+          f"{sum(1 for r in results if r.get('status') == 'skipped')} skipped",
+          flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

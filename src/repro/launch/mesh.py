@@ -1,0 +1,24 @@
+"""Production meshes.  Functions, not module constants — importing this file
+never touches jax device state (the dry-run sets XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host has (CPU smoke tests: 1 device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)

@@ -1,0 +1,152 @@
+"""Roofline model: compute / memory / collective terms from a compiled cell.
+
+Target hardware: TPU v5e —
+  peak bf16 compute : 197 TFLOP/s per chip
+  HBM bandwidth     : 819 GB/s per chip
+  ICI               : ~50 GB/s per link; we model an effective per-chip
+                      collective bandwidth of 2 links (bidirectional ring)
+                      = 100 GB/s and document the assumption here.
+
+The compiled module is the *per-device* SPMD program, so `cost_analysis()`
+FLOPs/bytes and the collective shapes parsed from `compiled.as_text()` are
+per-chip quantities; terms below are therefore per-chip seconds directly
+(equivalent to the global/chips formulation).
+
+Collective time weights (ring algorithms, n participants, (n-1)/n ~ 1):
+  all-gather        : out_bytes
+  reduce-scatter    : in_bytes  (= sum of operand bytes)
+  all-reduce        : 2 x out_bytes (RS + AG phases)
+  all-to-all        : out_bytes
+  collective-permute: out_bytes
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 100e9               # effective collective B/s per chip (2 x 50GB/s)
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s+(.*?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+    weighted_bytes: float = 0.0
+
+
+_WEIGHT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+           "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(type_str)
+        st.bytes_by_kind[kind] = st.bytes_by_kind.get(kind, 0) + b
+        st.count_by_kind[kind] = st.count_by_kind.get(kind, 0) + 1
+        st.weighted_bytes += _WEIGHT[kind] * b
+    return st
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful model FLOPs for the cell (6ND train / 2ND inference)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch      # one token per row
+
+
+def analyze(compiled, cfg, shape, n_chips: int) -> dict:
+    from repro.launch import hlo_cost
+
+    xla_cost = compiled.cost_analysis()
+    if isinstance(xla_cost, list):      # older jax returns [dict]
+        xla_cost = xla_cost[0]
+    text = compiled.as_text()
+    # trip-count-aware accounting (XLA's HloCostAnalysis counts while bodies
+    # once — 80x under-count for scan-over-layers; see hlo_cost.py)
+    tc = hlo_cost.analyze_hlo(text)
+    flops = tc.flops
+    bytes_accessed = tc.hbm_bytes
+    coll = parse_collectives(text)
+    coll.weighted_bytes = tc.coll_weighted
+    coll.bytes_by_kind = {k: int(v) for k, v in tc.coll_bytes.items()}
+
+    mem = compiled.memory_analysis()
+    mem_info = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+    }
+    # peak live ~ args + temps (aliased args overlap outputs)
+    peak_bytes = mem_info["argument_bytes"] + mem_info["temp_bytes"]
+
+    t_compute = flops / PEAK_FLOPS
+    # 'tpu' variants: large f32 arrays counted at 2B/elem — the CPU backend
+    # promotes bf16 dots/collectives to f32, a TPU build keeps native bf16.
+    t_memory = tc.hbm_bytes_tpu / HBM_BW
+    t_coll = tc.coll_weighted_tpu / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mflops = model_flops(cfg, shape)
+    return {
+        "flops_per_chip": flops,
+        "bytes_per_chip": bytes_accessed,
+        "xla_flops_per_chip": float(xla_cost.get("flops", 0.0)),
+        "xla_bytes_per_chip": float(xla_cost.get("bytes accessed", 0.0)),
+        "collective_bytes_per_chip": coll.weighted_bytes,
+        "collective_detail": {k: {"bytes": coll.bytes_by_kind[k],
+                                  "count": coll.count_by_kind.get(k, 0)}
+                              for k in coll.bytes_by_kind},
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "t_memory_raw_s": bytes_accessed / HBM_BW,
+        "t_collective_raw_s": coll.weighted_bytes / ICI_BW,
+        "bottleneck": bottleneck,
+        "step_time_s": max(terms.values()),
+        "model_flops_global": mflops,
+        "model_flops_per_chip": mflops / n_chips,
+        "useful_flops_ratio": (mflops / n_chips) / flops if flops else 0.0,
+        "roofline_fraction": (mflops / n_chips / PEAK_FLOPS)
+                             / max(terms.values()) if max(terms.values()) else 0.0,
+        "memory": mem_info,
+        "peak_bytes_per_chip": peak_bytes,
+        "fits_16gb": peak_bytes < 16e9,
+    }

@@ -1,0 +1,281 @@
+"""Step builders: train / prefill / decode, with shardings + input specs.
+
+`build_cell(cfg, shape, mesh)` returns everything the dry-run, trainer and
+server need for one (architecture x input-shape x mesh) cell:
+the jit-able step function, ShapeDtypeStruct input stand-ins, and
+in/out shardings.  No device allocation happens here.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import model as MDL
+from repro.optim import optimizer as OPT
+from repro.parallel import sharding as SH
+from repro.parallel.ctx import cell_rules, sharding_rules
+
+
+# --------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct stand-ins; never allocated)
+# --------------------------------------------------------------------------
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Model inputs for one cell (tokens/labels or decode token+cache extras)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        spec = {"tokens": sds((B, _text_len(cfg, S)), jnp.int32),
+                "labels": sds((B, _text_len(cfg, S)), jnp.int32)}
+        spec.update(_frontend_specs(cfg, B))
+        return spec
+    if shape.kind == "prefill":
+        spec = {"tokens": sds((B, _text_len(cfg, S)), jnp.int32)}
+        spec.update(_frontend_specs(cfg, B))
+        return spec
+    # decode: one new token against a cache of S
+    return {"token": sds((B, 1), jnp.int32), "pos": sds((), jnp.int32)}
+
+
+def _text_len(cfg: ModelConfig, S: int) -> int:
+    return S - cfg.vision_tokens if cfg.frontend == "vision" else S
+
+
+def _frontend_specs(cfg: ModelConfig, B: int) -> dict:
+    if cfg.frontend == "vision":
+        return {"patches": sds((B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)}
+    if cfg.family == "encdec":
+        return {"frames": sds((B, cfg.enc_seq_len, cfg.d_model), jnp.bfloat16)}
+    return {}
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(
+        functools.partial(MDL.init_model, cfg=cfg, dtype=dtype), key)
+
+
+def abstract_opt_state(params_shape, run: RunConfig):
+    return jax.eval_shape(
+        functools.partial(OPT.init_opt_state, run=run), params_shape)
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
+    B, S = shape.global_batch, shape.seq_len
+
+    def build(params):
+        enc_out = None
+        if cfg.family == "encdec":
+            enc_out = jnp.zeros((B, cfg.enc_seq_len, cfg.d_model), dtype)
+        return MDL.init_cache(cfg, B, S, dtype, enc_out=enc_out,
+                              params=params)
+
+    return jax.eval_shape(build, abstract_params(cfg, dtype))
+
+
+# --------------------------------------------------------------------------
+# Step functions
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, run: RunConfig) -> Callable:
+    def train_step(params, opt, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        extra = {k: v for k, v in batch.items() if k not in ("tokens", "labels")}
+
+        def loss_fn(p, tok, lab, ext):
+            return MDL.lm_loss(p, cfg, tok, lab, extra=ext, remat=run.remat)
+
+        if run.microbatches > 1:
+            n = run.microbatches
+            Bm = tokens.shape[0] // n
+
+            def micro(carry, i):
+                acc, metrics_acc = carry
+                sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * Bm, Bm)  # noqa: E731
+                ext = {k: sl(v) for k, v in extra.items()}
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, sl(tokens), sl(labels), ext)
+                acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                return (acc, jax.tree_util.tree_map(jnp.add, metrics_acc,
+                                                    {"loss": l, **m})), None
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zero_m = {"loss": 0.0, "nll": 0.0, "load_balance": 0.0,
+                      "dropped_frac": 0.0}
+            zero_m = jax.tree_util.tree_map(jnp.float32, zero_m)
+            (grads, metrics), _ = jax.lax.scan(
+                micro, (zero_g, zero_m), jnp.arange(n))
+            grads = jax.tree_util.tree_map(lambda g: g / n, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m / n, metrics)
+            loss = metrics.pop("loss")
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, tokens, labels, extra)
+
+        params, opt, opt_metrics = OPT.adamw_update(params, grads, opt, run)
+        return params, opt, {"loss": loss, **metrics, **opt_metrics}
+
+    if run.grad_compression == "int8":
+        from repro.parallel import compression as COMP
+        base = train_step
+
+        def train_step_compressed(params, opt, err, batch):
+            # recompute grads, compress w/ error feedback, then update —
+            # reuses the uncompressed path via a grad hook
+            tokens, labels = batch["tokens"], batch["labels"]
+            extra = {k: v for k, v in batch.items()
+                     if k not in ("tokens", "labels")}
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: MDL.lm_loss(p, cfg, tokens, labels, extra=extra,
+                                      remat=run.remat), has_aux=True)(params)
+            grads, err = COMP.compress_grads(grads, err)
+            params, opt, opt_metrics = OPT.adamw_update(params, grads, opt, run)
+            return params, opt, err, {"loss": loss, **metrics, **opt_metrics}
+
+        return train_step_compressed
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        tokens = batch["tokens"]
+        extra = {k: v for k, v in batch.items() if k != "tokens"}
+        hidden, _ = MDL.forward(params, cfg, tokens, extra=extra, remat="none",
+                                return_hidden=True)
+        from repro.models import layers as L
+        return L.unembed(params["embed"], hidden[:, -1:])[:, 0]
+        # next-token logits only; full (B,S,V) logits are never materialized
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, cache, token, pos):
+        return MDL.decode_step(params, cfg, cache, token, pos)
+
+    return decode_step
+
+
+# --------------------------------------------------------------------------
+# Cell assembly (step + specs + shardings)
+# --------------------------------------------------------------------------
+
+@dataclass
+class Cell:
+    name: str
+    step: Callable
+    args: tuple                  # abstract args (ShapeDtypeStructs)
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple
+
+
+def _batch_shardings(mesh, specs: dict, multi_pod: bool):
+    dp = ("pod", "data") if multi_pod and "pod" in mesh.axis_names else ("data",)
+    dp_entry = dp if len(dp) > 1 else dp[0]
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    out = {}
+    for k, v in specs.items():
+        if v.ndim == 0 or v.shape[0] % dp_size != 0:
+            out[k] = NamedSharding(mesh, P())
+        else:
+            out[k] = NamedSharding(mesh, P(*([dp_entry] + [None] * (v.ndim - 1))))
+    return out
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, run: RunConfig,
+               *, multi_pod: bool = False) -> Cell:
+    specs = input_specs(cfg, shape)
+    params = abstract_params(cfg, jnp.dtype(run.param_dtype))
+    tp = run.layout != "zero3"  # "sp" keeps TP params, seq-shards activations
+    pshard = SH.param_shardings(
+        cfg, mesh, params, tp=tp,
+        fsdp=shape.kind == "train" or _needs_fsdp(cfg) or not tp)
+    rules = cell_rules(cfg, mesh, batch=shape.global_batch,
+                       multi_pod=multi_pod, layout=run.layout)
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        opt = abstract_opt_state(params, run)
+        oshard = OPT.OptState(
+            step=rep,
+            mu=SH.param_shardings(cfg, mesh, opt.mu, fsdp=True, tp=tp),
+            nu=SH.param_shardings(cfg, mesh, opt.nu, fsdp=True, tp=tp))
+        bshard = _batch_shardings(mesh, specs, multi_pod)
+        raw = make_train_step(cfg, run)
+
+        def step(params, opt, batch):
+            with sharding_rules(mesh, rules):
+                return raw(params, opt, batch)
+
+        return Cell(
+            name=f"{cfg.name}/{shape.name}",
+            step=step,
+            args=(params, opt, specs),
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, rep),
+            donate=(0, 1))
+
+    if shape.kind == "prefill":
+        bshard = _batch_shardings(mesh, specs, multi_pod)
+        raw = make_prefill_step(cfg)
+
+        def step(params, batch):
+            with sharding_rules(mesh, rules):
+                return raw(params, batch)
+
+        out_sh = NamedSharding(mesh, P("data", "model"))
+        return Cell(
+            name=f"{cfg.name}/{shape.name}",
+            step=step,
+            args=(params, specs),
+            in_shardings=(pshard, bshard),
+            out_shardings=out_sh,
+            donate=())
+
+    # decode
+    cache = abstract_cache(cfg, shape, jnp.dtype(run.param_dtype))
+    cshard = SH.cache_shardings(cfg, mesh, cache, shape.global_batch)
+    bshard = _batch_shardings(mesh, specs, multi_pod=False)
+    raw = make_decode_step(cfg)
+
+    def step(params, cache, token, pos):
+        with sharding_rules(mesh, rules):
+            return raw(params, cache, token, pos)
+
+    logits_sh = NamedSharding(
+        mesh, P("data" if shape.global_batch % mesh.shape["data"] == 0
+                else None, None, "model"))
+    return Cell(
+        name=f"{cfg.name}/{shape.name}",
+        step=step,
+        args=(params, cache, specs["token"], specs["pos"]),
+        in_shardings=(pshard, cshard, bshard["token"], rep),
+        out_shardings=(logits_sh, cshard),
+        donate=(1,))
+
+
+def _needs_fsdp(cfg: ModelConfig) -> bool:
+    # >= ~20B params cannot hold bf16 replica per TP group member on v5e
+    return cfg.param_count() * 2 / 16 > 8e9
+
+
+def lower_cell(cell: Cell):
+    fn = jax.jit(cell.step,
+                 in_shardings=cell.in_shardings,
+                 out_shardings=cell.out_shardings,
+                 donate_argnums=cell.donate)
+    return fn.lower(*cell.args)

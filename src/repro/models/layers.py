@@ -1,0 +1,274 @@
+"""Core transformer layers: norms, RoPE, GQA attention, MLPs.
+
+Pure-functional style: ``init_*`` returns a param pytree, ``apply``-style
+functions consume it.  All attention paths route through
+:func:`repro.kernels.ops.attention`, which dispatches to the Pallas kernel on
+TPU and a chunked-jnp flash equivalent elsewhere (memory-safe at 32k+).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, dtype=jnp.float32):
+    if cfg.norm == "rms":
+        return {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "layer":
+        return {"scale": jnp.ones((cfg.d_model,), dtype),
+                "bias": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.norm == "nonparam":
+        return {}
+    raise ValueError(cfg.norm)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rms_core(x, scale, eps):
+    y, _ = _rms_fwd(x, scale, eps)
+    return y
+
+
+def _rms_stats(x, eps):
+    d = x.shape[-1]
+    ms = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)[..., None] / d
+    return jax.lax.rsqrt(ms + eps)                      # (..., 1) f32
+
+
+def _rms_fwd(x, scale, eps):
+    inv = _rms_stats(x, eps)
+    y = x * inv.astype(x.dtype) * scale.astype(x.dtype)
+    return y, (x, scale, inv)
+
+
+def _rms_bwd(eps, res, dy):
+    """All full-width tensors stay in x.dtype; only (...,1) stats are f32.
+
+    A plain-autodiff RMSNorm upcasts x to f32 in the backward, which XLA then
+    hoists into the remat-saved layer residuals — doubling activation HBM on
+    the 512-device dry-run.  This custom VJP removes the f32 path entirely.
+    """
+    x, scale, inv = res
+    d = x.shape[-1]
+    dt = x.dtype
+    g = dy * scale.astype(dt)
+    dot = jnp.einsum("...d,...d->...", g, x,
+                     preferred_element_type=jnp.float32)[..., None]
+    coef = (inv ** 3) * (dot / d)
+    dx = g * inv.astype(dt) - x * coef.astype(dt)
+    dscale = jnp.einsum("...d,...d->d", dy, x * inv.astype(dt),
+                        preferred_element_type=jnp.float32)
+    return dx, dscale.astype(scale.dtype)
+
+
+_rms_core.defvjp(_rms_fwd, _rms_bwd)
+
+
+def apply_norm(params, x, kind: str, eps: float = 1e-5):
+    """Statistics accumulate in f32; full-width tensors stay in x.dtype."""
+    dt = x.dtype
+    d = x.shape[-1]
+    if kind == "rms":
+        return _rms_core(x, params["scale"], eps)
+    mean = (jnp.sum(x, axis=-1, keepdims=True, dtype=jnp.float32) / d)
+    ms = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)[..., None] / d
+    var = ms - mean * mean
+    inv = jax.lax.rsqrt(var + eps)
+    out = (x - mean.astype(dt)) * inv.astype(dt)
+    if kind == "layer":
+        out = out * params["scale"].astype(dt) + params["bias"].astype(dt)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, positions: jnp.ndarray):
+    """(..., head_dim//2) cos/sin tables for given positions."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x: (B, S, H, D); cos/sin: (S, D/2) or (B, S, D/2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if cos.ndim == 2:  # (S, D/2) -> broadcast over batch and heads
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:              # (B, S, D/2)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(dt)
+
+
+# --------------------------------------------------------------------------
+# Linear / embedding initializers
+# --------------------------------------------------------------------------
+
+def _dense(key, d_in, d_out, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype) * jnp.asarray(scale, dtype)
+
+
+def init_embedding(key, cfg: ModelConfig, dtype=jnp.float32):
+    p = {"tok": jax.random.normal(key, (cfg.padded_vocab, cfg.d_model), dtype) * 0.02}
+    if not cfg.tie_embeddings:
+        p["out"] = _dense(jax.random.fold_in(key, 1), cfg.d_model,
+                          cfg.padded_vocab, dtype)
+    return p
+
+
+def embed(params, tokens):
+    return params["tok"][tokens]
+
+
+def unembed(params, x):
+    w = params.get("out")
+    if w is None:
+        w = params["tok"].T
+    return x @ w.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA, optional bias / sliding window / cross-attention)
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, hd, nq, nkv = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense(ks[0], d, nq * hd, dtype),
+        "wk": _dense(ks[1], d, nkv * hd, dtype),
+        "wv": _dense(ks[2], d, nkv * hd, dtype),
+        "wo": _dense(ks[3], nq * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), dtype)
+    return p
+
+
+def qkv_proj(params, cfg: ModelConfig, x, kv_input=None):
+    """Project to (q, k, v) with shapes (B, S, n, hd)."""
+    B, S, _ = x.shape
+    kv_input = x if kv_input is None else kv_input
+    Skv = kv_input.shape[1]
+    q = x @ params["wq"].astype(x.dtype)
+    k = kv_input @ params["wk"].astype(x.dtype)
+    v = kv_input @ params["wv"].astype(x.dtype)
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    from repro.parallel.ctx import shard_hint
+    q = shard_hint(q.reshape(B, S, cfg.n_heads, cfg.head_dim), "act_q")
+    k = shard_hint(k.reshape(B, Skv, cfg.n_kv_heads, cfg.head_dim), "act_kv")
+    v = shard_hint(v.reshape(B, Skv, cfg.n_kv_heads, cfg.head_dim), "act_kv")
+    return q, k, v
+
+
+def attention_block(params, cfg: ModelConfig, x, *, positions=None,
+                    causal=True, kv_input=None, kv_positions=None):
+    """Full attention sub-layer (projections + core attention + out proj)."""
+    from repro.kernels import ops  # local import: kernels may pick backend lazily
+
+    B, S, _ = x.shape
+    q, k, v = qkv_proj(params, cfg, x, kv_input)
+    if cfg.rope_theta:
+        if positions is None:
+            positions = jnp.arange(S)
+        cos, sin = rope_freqs(cfg.head_dim, cfg.rope_theta, positions)
+        q = apply_rope(q, cos, sin)
+        if kv_input is None:
+            k = apply_rope(k, cos, sin)
+        else:
+            kvp = kv_positions if kv_positions is not None else jnp.arange(k.shape[1])
+            ck, sk = rope_freqs(cfg.head_dim, cfg.rope_theta, kvp)
+            k = apply_rope(k, ck, sk)
+    out = ops.attention(q, k, v, causal=causal and kv_input is None,
+                        sliding_window=cfg.sliding_window)
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return out @ params["wo"].astype(x.dtype)
+
+
+def decode_attention(params, cfg: ModelConfig, x, cache_k, cache_v, pos,
+                     *, lengths=None):
+    """Single-token decode: x (B, 1, d); cache_{k,v} (B, S, nkv, hd).
+
+    ``pos`` is the absolute position of the new token; the caller has already
+    placed the new k/v into the cache (see model.py) so attention runs over
+    cache[0:pos+1].  Returns (B, 1, d).
+    """
+    from repro.kernels import ops
+
+    B = x.shape[0]
+    q = x @ params["wq"].astype(x.dtype)
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+    q = q.reshape(B, 1, cfg.n_heads, cfg.head_dim)
+    if cfg.rope_theta:
+        cos, sin = rope_freqs(cfg.head_dim, cfg.rope_theta, pos[None])
+        q = apply_rope(q, cos, sin)
+    out = ops.decode_attention(q, cache_k, cache_v, pos, lengths=lengths)
+    return out.reshape(B, 1, cfg.n_heads * cfg.head_dim) @ params["wo"].astype(x.dtype)
+
+
+def project_kv_token(params, cfg: ModelConfig, x, pos):
+    """Project one token's k/v (for cache insertion), with RoPE at ``pos``."""
+    B = x.shape[0]
+    k = x @ params["wk"].astype(x.dtype)
+    v = x @ params["wv"].astype(x.dtype)
+    if "bk" in params:
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    k = k.reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.rope_theta:
+        cos, sin = rope_freqs(cfg.head_dim, cfg.rope_theta, pos[None])
+        k = apply_rope(k, cos, sin)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# --------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int, dtype=jnp.float32):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {"wg": _dense(ks[0], d, d_ff, dtype),
+                "wu": _dense(ks[1], d, d_ff, dtype),
+                "wd": _dense(ks[2], d_ff, d, dtype)}
+    return {"wu": _dense(ks[0], d, d_ff, dtype),
+            "wd": _dense(ks[1], d_ff, d, dtype)}
+
+
+def apply_mlp(params, cfg: ModelConfig, x):
+    from repro.parallel.ctx import shard_hint
+    if cfg.act == "swiglu":
+        g = x @ params["wg"].astype(x.dtype)
+        u = x @ params["wu"].astype(x.dtype)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(x @ params["wu"].astype(x.dtype))
+    if h.ndim == 3:
+        h = shard_hint(h, "act_btf")     # keep FFN hidden tensor-parallel
+    return h @ params["wd"].astype(x.dtype)

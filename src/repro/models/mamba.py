@@ -1,0 +1,103 @@
+"""Mamba-1 block (selective SSM) — falcon-mamba / jamba mixer.
+
+Block: in_proj -> (x, z); depthwise causal conv1d + SiLU on x; selection
+projections (dt, B, C); selective scan (repro.kernels.ops); gate by SiLU(z);
+out_proj.  Decode keeps an O(1) state: (conv tail, SSM state h).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_in, dt_rank, s.d_state, s.d_conv
+
+
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    d_in, dt_rank, N, d_conv = _dims(cfg)
+    ks = jax.random.split(key, 7)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype))
+    return {
+        # separate x/z projections (a fused (d, 2*d_in) would split across
+        # the TP shards after the matmul — see parallel/sharding.py)
+        "in_x": jax.random.normal(ks[0], (d, d_in), dtype) * scale,
+        "in_z": jax.random.normal(ks[6], (d, d_in), dtype) * scale,
+        "conv_w": jax.random.normal(ks[1], (d_conv, d_in), dtype) * 0.2,
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": jax.random.normal(ks[2], (d_in, dt_rank + 2 * N), dtype)
+                  * (1.0 / jnp.sqrt(jnp.asarray(d_in, dtype))),
+        "dt_proj": jax.random.normal(ks[3], (dt_rank, d_in), dtype)
+                   * (1.0 / jnp.sqrt(jnp.asarray(dt_rank, dtype))),
+        "dt_bias": jnp.log(jnp.expm1(  # softplus^-1 of uniform [1e-3, 1e-1]
+            10 ** jax.random.uniform(ks[4], (d_in,), jnp.float32,
+                                     -3.0, -1.0))).astype(dtype),
+        "A_log": jnp.log(jnp.tile(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (d_in, 1))).astype(dtype),
+        "D": jnp.ones((d_in,), dtype),
+        "out_proj": jax.random.normal(ks[5], (d_in, d), dtype)
+                    * (1.0 / jnp.sqrt(jnp.asarray(d_in, dtype))),
+    }
+
+
+def _selection(params, cfg, xc):
+    """xc (B,S,d_in) -> dt (B,S,d_in), Bc (B,S,N), Cc (B,S,N)."""
+    _, dt_rank, N, _ = _dims(cfg)
+    sel = xc @ params["x_proj"].astype(xc.dtype)
+    dt_r, Bc, Cc = jnp.split(sel, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(
+        dt_r @ params["dt_proj"].astype(xc.dtype)
+        + params["dt_bias"].astype(xc.dtype))
+    return dt, Bc, Cc
+
+
+def apply_mamba(params, cfg: ModelConfig, x):
+    """Full-sequence forward: x (B,S,d) -> (B,S,d)."""
+    B, S, _ = x.shape
+    d_in, dt_rank, N, d_conv = _dims(cfg)
+    xc = x @ params["in_x"].astype(x.dtype)               # (B,S,d_in)
+    z = x @ params["in_z"].astype(x.dtype)
+    # depthwise causal conv1d along S
+    xpad = jnp.pad(xc, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    w = params["conv_w"].astype(x.dtype)                  # (d_conv, d_in)
+    xc = sum(xpad[:, i:i + S] * w[i][None, None] for i in range(d_conv))
+    xc = jax.nn.silu(xc + params["conv_b"].astype(x.dtype))
+    dt, Bc, Cc = _selection(params, cfg, xc)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))     # (d_in, N)
+    y = ops.selective_scan(xc, dt, A, Bc, Cc, params["D"])
+    y = y * jax.nn.silu(z)
+    return y @ params["out_proj"].astype(x.dtype)
+
+
+def init_mamba_state(cfg: ModelConfig, batch, dtype=jnp.float32):
+    d_in, _, N, d_conv = _dims(cfg)
+    return {"conv": jnp.zeros((batch, d_conv - 1, d_in), dtype),
+            "h": jnp.zeros((batch, d_in, N), jnp.float32)}
+
+
+def decode_mamba(params, cfg: ModelConfig, state, x):
+    """One decode step: x (B,1,d), O(1) state update."""
+    B = x.shape[0]
+    d_in, dt_rank, N, d_conv = _dims(cfg)
+    xc = x[:, 0] @ params["in_x"].astype(x.dtype)         # (B, d_in)
+    z = x[:, 0] @ params["in_z"].astype(x.dtype)
+    # conv over [state.conv ; xc]
+    hist = jnp.concatenate([state["conv"], xc[:, None]], axis=1)  # (B,d_conv,d_in)
+    w = params["conv_w"].astype(x.dtype)
+    xconv = (hist * w[None]).sum(axis=1) + params["conv_b"].astype(x.dtype)
+    xconv = jax.nn.silu(xconv)
+    dt, Bc, Cc = _selection(params, cfg, xconv[:, None])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    h, y = ops.ssm_decode(state["h"], xconv, dt[:, 0], A, Bc[:, 0], Cc[:, 0],
+                          params["D"])
+    y = y * jax.nn.silu(z)
+    out = (y @ params["out_proj"].astype(x.dtype))[:, None]
+    new_state = {"conv": hist[:, 1:], "h": h}
+    return new_state, out

@@ -1,0 +1,470 @@
+"""Unified architecture zoo: decoder LMs, hybrid SSM/attention, enc-dec.
+
+One functional model covering all 10 assigned architectures:
+
+- layer plan     : `plan_layers` derives (prefix, periodic super-block) specs
+                   so heterogeneous stacks (Jamba 1:7, DeepSeek first-dense)
+                   still scan over layers (HLO size O(one super-block)).
+- forward        : training / prefill (full sequence)
+- decode         : single-token step over per-layer caches (KV ring for SWA,
+                   O(1) SSM state for Mamba)
+- enc-dec        : Whisper-style encoder + cross-attention decoder
+- frontends      : audio/vision are STUBS — precomputed embeddings arrive as
+                   inputs (per assignment), optionally through a linear adapter.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models.moe import moe_layer_indices
+from repro.parallel.ctx import shard_hint
+
+
+# --------------------------------------------------------------------------
+# Layer planning
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LayerSpec:
+    mixer: str            # attn | mamba
+    ffn: str              # dense | moe | none
+    d_ff: int             # hidden size if dense
+
+
+def layer_spec(cfg: ModelConfig, i: int) -> LayerSpec:
+    if cfg.family == "ssm":
+        return LayerSpec("mamba", "none", 0)
+    if cfg.family == "hybrid":
+        mixer = "attn" if i % cfg.hybrid_period == cfg.hybrid_attn_index else "mamba"
+    else:
+        mixer = "attn"
+    moe_set = moe_layer_indices(cfg)
+    if cfg.moe is not None and i in moe_set:
+        return LayerSpec(mixer, "moe", 0)
+    if cfg.moe is not None and i not in moe_set:
+        return LayerSpec(mixer, "dense", cfg.moe.d_ff_dense or cfg.d_ff)
+    if cfg.d_ff:
+        return LayerSpec(mixer, "dense", cfg.d_ff)
+    return LayerSpec(mixer, "none", 0)
+
+
+def plan_layers(cfg: ModelConfig):
+    """-> (prefix_specs, period_specs, n_super).  specs[prefix:] is periodic."""
+    specs = [layer_spec(cfg, i) for i in range(cfg.n_layers)]
+    base = cfg.hybrid_period or 1
+    if cfg.moe is not None and cfg.moe.every > 1:
+        # period must be a multiple of the MoE interval
+        base = base * cfg.moe.every // _gcd(base, cfg.moe.every)
+    for prefix in range(0, 3):
+        body = specs[prefix:]
+        for period in (base, base * 2):
+            if len(body) == 0 or len(body) % period:
+                continue
+            pat = body[:period]
+            if all(body[j] == pat[j % period] for j in range(len(body))):
+                return specs[:prefix], pat, len(body) // period
+    # fall back: no scan (fully unrolled prefix)
+    return specs, [], 0
+
+
+def _gcd(a, b):
+    while b:
+        a, b = b, a % b
+    return a
+
+
+# --------------------------------------------------------------------------
+# Parameter init
+# --------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, spec: LayerSpec, dtype):
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm1": L.init_norm(cfg, dtype)}
+    if spec.mixer == "attn":
+        p["attn"] = L.init_attention(ks[0], cfg, dtype)
+    else:
+        p["mamba"] = M.init_mamba(ks[0], cfg, dtype)
+    if spec.ffn == "dense":
+        p["norm2"] = L.init_norm(cfg, dtype)
+        p["mlp"] = L.init_mlp(ks[1], cfg, spec.d_ff, dtype)
+    elif spec.ffn == "moe":
+        p["norm2"] = L.init_norm(cfg, dtype)
+        p["moe"] = MOE.init_moe(ks[1], cfg, dtype)
+    return p
+
+
+def _init_enc_layer(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 2)
+    return {"norm1": L.init_norm(cfg, dtype),
+            "attn": L.init_attention(ks[0], cfg, dtype),
+            "norm2": L.init_norm(cfg, dtype),
+            "mlp": L.init_mlp(ks[1], cfg, cfg.d_ff, dtype)}
+
+
+def _init_dec_cross(key, cfg: ModelConfig, dtype):
+    return {"norm_x": L.init_norm(cfg, dtype),
+            "cross": L.init_attention(key, cfg, dtype)}
+
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_model(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    """Full parameter pytree.  Wrap in jax.eval_shape for the dry-run."""
+    prefix, period, n_super = plan_layers(cfg)
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {"embed": L.init_embedding(keys[0], cfg, dtype)}
+
+    params["prefix"] = [
+        _init_layer(jax.random.fold_in(keys[1], i), cfg, s, dtype)
+        for i, s in enumerate(prefix)]
+
+    blocks = []
+    for b in range(n_super):
+        kb = jax.random.fold_in(keys[2], b)
+        blocks.append({
+            f"l{j}": _init_layer(jax.random.fold_in(kb, j), cfg, s, dtype)
+            for j, s in enumerate(period)})
+    params["blocks"] = _stack(blocks) if blocks else {}
+
+    params["final_norm"] = L.init_norm(cfg, dtype)
+
+    if cfg.family == "encdec":
+        enc = [_init_enc_layer(jax.random.fold_in(keys[3], i), cfg, dtype)
+               for i in range(cfg.n_enc_layers)]
+        params["enc_blocks"] = _stack(enc)
+        params["enc_final_norm"] = L.init_norm(cfg, dtype)
+        cross = [_init_dec_cross(jax.random.fold_in(keys[4], i), cfg, dtype)
+                 for i in range(cfg.n_layers)]
+        # cross-attn params follow the decoder scan structure (period must be 1)
+        params["cross_blocks"] = _stack(cross)
+    if cfg.frontend == "vision":
+        params["vision_adapter"] = L._dense(keys[5], cfg.d_model, cfg.d_model,
+                                            dtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+
+def _apply_layer(p, cfg: ModelConfig, spec: LayerSpec, x, positions,
+                 cross_p=None, enc_out=None):
+    aux = jnp.zeros((2,), jnp.float32)  # (load_balance, dropped_frac)
+    h = L.apply_norm(p["norm1"], x, cfg.norm)
+    if spec.mixer == "attn":
+        x = x + L.attention_block(p["attn"], cfg, h, positions=positions)
+    else:
+        x = x + M.apply_mamba(p["mamba"], cfg, h)
+    if cross_p is not None:
+        hc = L.apply_norm(cross_p["norm_x"], x, cfg.norm)
+        x = x + L.attention_block(cross_p["cross"], cfg, hc, causal=False,
+                                  kv_input=enc_out)
+    if spec.ffn == "dense":
+        h = L.apply_norm(p["norm2"], x, cfg.norm)
+        x = x + L.apply_mlp(p["mlp"], cfg, h)
+    elif spec.ffn == "moe":
+        h = L.apply_norm(p["norm2"], x, cfg.norm)
+        out, moe_aux = MOE.apply_moe(p["moe"], cfg, h)
+        x = x + out
+        aux = aux + jnp.stack([moe_aux["load_balance"],
+                               moe_aux["dropped_frac"]])
+    return shard_hint(x, "act_btd"), aux
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# --------------------------------------------------------------------------
+# Forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, tokens, *, extra: Optional[dict] = None,
+            remat: str = "full", return_hidden: bool = False):
+    """tokens (B, S_text) int32.  extra carries frontend embeddings / enc in.
+
+    Returns (logits (B, S, padded_vocab), aux (2,)) — or the final hidden
+    states instead of logits when ``return_hidden`` (the fused chunked loss
+    and last-token-only prefill paths never materialize full logits).
+    """
+    prefix, period, n_super = plan_layers(cfg)
+    x = L.embed(params["embed"], tokens)
+    extra = extra or {}
+
+    if cfg.frontend == "vision" and "patches" in extra:
+        vis = extra["patches"].astype(x.dtype) @ params["vision_adapter"].astype(x.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    x = shard_hint(x, "act_btd")
+
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(params, cfg, extra["frames"], remat=remat)
+        x = x + _sinusoid(S, cfg.d_model, x.dtype)
+
+    aux = jnp.zeros((2,), jnp.float32)
+    for i, spec in enumerate(prefix):
+        x, a = _apply_layer(params["prefix"][i], cfg, spec, x, positions)
+        aux = aux + a
+
+    if n_super:
+        cross = params.get("cross_blocks")
+
+        def body(carry, blk):
+            x, aux = carry
+            if cross is not None:
+                blk, cb = blk
+            for j, spec in enumerate(period):
+                cp = cb if (cross is not None and j == 0) else None
+                x, a = _apply_layer(blk[f"l{j}"], cfg, spec, x, positions,
+                                    cross_p=cp, enc_out=enc_out)
+                aux = aux + a
+            # barrier: stops XLA hoisting dtype-converts of the remat-saved
+            # carry into the residual stack (observed 2x activation HBM)
+            x = jax.lax.optimization_barrier(x)
+            return (x, aux), None
+
+        xs = (params["blocks"], cross) if cross is not None else params["blocks"]
+        (x, aux), _ = jax.lax.scan(_remat(body, remat), (x, aux), xs)
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    if return_hidden:
+        return x, aux
+    logits = L.unembed(params["embed"], x)
+    return shard_hint(logits, "logits"), aux
+
+
+def _encode(params, cfg: ModelConfig, frames, *, remat="full"):
+    """Whisper encoder over precomputed frame embeddings (frontend stub)."""
+    x = frames + _sinusoid(frames.shape[1], cfg.d_model, frames.dtype)
+    x = shard_hint(x, "act_btd")
+
+    def body(x, blk):
+        h = L.apply_norm(blk["norm1"], x, cfg.norm)
+        x = x + L.attention_block(blk["attn"], cfg, h, causal=False)
+        h = L.apply_norm(blk["norm2"], x, cfg.norm)
+        x = x + L.apply_mlp(blk["mlp"], cfg, h)
+        return shard_hint(x, "act_btd"), None
+
+    x, _ = jax.lax.scan(_remat(body, remat), x, params["enc_blocks"])
+    return L.apply_norm(params["enc_final_norm"], x, cfg.norm)
+
+
+@functools.lru_cache(maxsize=8)
+def _sinusoid_np(S: int, d: int):
+    import numpy as np
+    pos = np.arange(S)[:, None]
+    dim = np.arange(0, d, 2)[None, :] / d
+    ang = pos / (10000 ** dim)
+    out = np.zeros((S, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out
+
+
+def _sinusoid(S, d, dtype):
+    return jnp.asarray(_sinusoid_np(S, d), dtype)[None]
+
+
+# --------------------------------------------------------------------------
+# Loss
+# --------------------------------------------------------------------------
+
+def lm_loss(params, cfg: ModelConfig, tokens, labels, *,
+            extra: Optional[dict] = None, remat: str = "full",
+            moe_loss_weight: float = 0.01, xent_chunk: int = 8192):
+    """Fused chunked softmax-xent: the (T, vocab) logits are never
+    materialized — unembed + logsumexp run per token-chunk under remat.
+    """
+    hidden, aux = forward(params, cfg, tokens, extra=extra, remat=remat,
+                          return_hidden=True)
+    S_text = labels.shape[1]
+    hidden = hidden[:, -S_text:]
+    B, S, d = hidden.shape
+    T = B * S
+    w = params["embed"].get("out")
+    transpose = w is None
+    if transpose:
+        w = params["embed"]["tok"]                  # (V, d), tied
+    # pin the loss-entry layout: tokens over dp, d over model — one reshard
+    # here instead of one gather per xent chunk when the trunk used
+    # sequence-parallel activations
+    x = shard_hint(hidden.reshape(T, d), "xent_in")
+    y = labels.reshape(T)
+    chunk = min(xent_chunk, T)
+    if T % chunk:
+        chunk = T
+    n = T // chunk
+
+    def body(nll_sum, i):
+        xc = jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk)
+        yc = jax.lax.dynamic_slice_in_dim(y, i * chunk, chunk)
+        # tied path contracts via dot_general (td,vd->tv): never materializes
+        # the transposed (d,V) embedding per chunk step
+        lg = (jnp.einsum("td,vd->tv", xc, w.astype(xc.dtype)) if transpose
+              else xc @ w.astype(xc.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, yc[:, None], axis=-1)[:, 0]
+        return nll_sum + jnp.sum(lse - gold), None
+
+    nll_sum, _ = jax.lax.scan(jax.checkpoint(body), jnp.float32(0.0),
+                              jnp.arange(n))
+    nll = nll_sum / T
+    loss = nll + moe_loss_weight * aux[0]
+    return loss, {"nll": nll, "load_balance": aux[0], "dropped_frac": aux[1]}
+
+
+# --------------------------------------------------------------------------
+# Decode (single token, cached)
+# --------------------------------------------------------------------------
+
+def _layer_cache(cfg: ModelConfig, spec: LayerSpec, batch, max_seq, dtype):
+    if spec.mixer == "mamba":
+        return M.init_mamba_state(cfg, batch, dtype)
+    W = cfg.sliding_window or 0
+    S = min(max_seq, W) if W else max_seq
+    return {"k": jnp.zeros((batch, S, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, S, cfg.n_kv_heads, cfg.head_dim), dtype)}
+
+
+def init_cache(cfg: ModelConfig, batch, max_seq, dtype=jnp.bfloat16,
+               enc_out=None, params=None):
+    """Decode cache pytree; layers stacked to mirror the scan structure."""
+    prefix, period, n_super = plan_layers(cfg)
+    cache: dict[str, Any] = {
+        "prefix": [_layer_cache(cfg, s, batch, max_seq, dtype) for s in prefix],
+        "blocks": _stack([
+            {f"l{j}": _layer_cache(cfg, s, batch, max_seq, dtype)
+             for j, s in enumerate(period)}
+            for _ in range(n_super)]) if n_super else {},
+    }
+    if cfg.family == "encdec":
+        assert enc_out is not None and params is not None
+        crosses = []
+        n = params["cross_blocks"]["cross"]["wk"].shape[0]
+        for i in range(n):
+            cp = jax.tree_util.tree_map(lambda a, i=i: a[i],
+                                        params["cross_blocks"])
+            _, ck, cv = L.qkv_proj(cp["cross"], cfg, enc_out)
+            crosses.append({"ck": ck, "cv": cv})
+        cache["cross"] = _stack(crosses)
+    return cache
+
+
+def _decode_layer(p, cfg: ModelConfig, spec: LayerSpec, lcache, x, pos,
+                  cross_p=None, ccache=None):
+    h = L.apply_norm(p["norm1"], x, cfg.norm)
+    if spec.mixer == "attn":
+        W = cfg.sliding_window
+        slot = jnp.mod(pos, W) if W else pos
+        k_new, v_new = L.project_kv_token(p["attn"], cfg, h, pos)
+        ck = jax.lax.dynamic_update_slice_in_dim(lcache["k"], k_new, slot, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(lcache["v"], v_new, slot, 1)
+        lcache = {"k": ck, "v": cv}
+        if W:
+            # ring buffer: every slot < min(pos+1, W) is live; RoPE was applied
+            # at write time so order inside the ring is irrelevant.  The query
+            # still ropes at the ABSOLUTE position; `lengths` only masks.
+            n_valid = jnp.minimum(pos + 1, W)
+            lengths = jnp.full((x.shape[0],), n_valid - 1)
+            x = x + L.decode_attention(p["attn"], cfg, h, ck, cv,
+                                       pos, lengths=lengths)
+        else:
+            x = x + L.decode_attention(p["attn"], cfg, h, ck, cv, pos)
+    else:
+        lcache, out = M.decode_mamba(p["mamba"], cfg, lcache, h)
+        x = x + out
+    if cross_p is not None:
+        hc = L.apply_norm(cross_p["norm_x"], x, cfg.norm)
+        from repro.kernels import ops
+        B = hc.shape[0]
+        q = hc @ cross_p["cross"]["wq"].astype(hc.dtype)
+        if "bq" in cross_p["cross"]:
+            q = q + cross_p["cross"]["bq"].astype(hc.dtype)
+        q = q.reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        o = ops.decode_attention(q, ccache["ck"], ccache["cv"],
+                                 ccache["ck"].shape[1] - 1)
+        o = o.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+        x = x + o @ cross_p["cross"]["wo"].astype(hc.dtype)
+    if spec.ffn == "dense":
+        h = L.apply_norm(p["norm2"], x, cfg.norm)
+        x = x + L.apply_mlp(p["mlp"], cfg, h)
+    elif spec.ffn == "moe":
+        h = L.apply_norm(p["norm2"], x, cfg.norm)
+        out, _ = MOE.apply_moe(p["moe"], cfg, h)
+        x = x + out
+    return lcache, x
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos):
+    """token (B,1) int32; pos scalar int32 (absolute position of token).
+
+    Returns (logits (B,1,V), new_cache).
+    """
+    prefix, period, n_super = plan_layers(cfg)
+    x = L.embed(params["embed"], token)
+    if cfg.family == "encdec":
+        x = x + _sinusoid_at(pos, cfg.d_model, x.dtype)
+    x = shard_hint(x, "act_btd_decode")
+
+    new_prefix = []
+    for i, spec in enumerate(prefix):
+        lc, x = _decode_layer(params["prefix"][i], cfg, spec,
+                              cache["prefix"][i], x, pos)
+        new_prefix.append(lc)
+
+    new_blocks = cache["blocks"]
+    if n_super:
+        cross = params.get("cross_blocks")
+
+        def body(x, scanned):
+            if cross is not None:
+                blk, bc, cp, cc = scanned
+            else:
+                blk, bc = scanned
+            new_bc = {}
+            for j, spec in enumerate(period):
+                use_cross = cross is not None and j == 0
+                new_bc[f"l{j}"], x = _decode_layer(
+                    blk[f"l{j}"], cfg, spec, bc[f"l{j}"], x, pos,
+                    cross_p=cp if use_cross else None,
+                    ccache=cc if use_cross else None)
+            return x, new_bc
+
+        if cross is not None:
+            xs = (params["blocks"], cache["blocks"], cross, cache["cross"])
+        else:
+            xs = (params["blocks"], cache["blocks"])
+        x, new_blocks = jax.lax.scan(body, x, xs)
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed(params["embed"], x)
+    new_cache = dict(cache)
+    new_cache["prefix"] = new_prefix
+    new_cache["blocks"] = new_blocks
+    return logits, new_cache
+
+
+def _sinusoid_at(pos, d, dtype):
+    i = jnp.arange(0, d, 2) / d
+    ang = pos.astype(jnp.float32) / (10000.0 ** i)
+    out = jnp.zeros((d,), jnp.float32)
+    out = out.at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
+    return out.astype(dtype)[None, None]

@@ -1,0 +1,114 @@
+"""Mixture-of-Experts FFN: shared + routed top-k experts (GShard-style
+grouped capacity dispatch so FLOPs scale with active — not total — experts
+and the dispatch tensor stays O(group_size^2 * K) per group, never O(T^2)).
+
+Covers Mixtral (8e top-2), DeepSeek-MoE (64e top-6 + 2 shared, fine-grained)
+and Jamba (16e top-2 every other layer).  Expert weights carry a leading
+expert axis so they shard over the "model" mesh axis (expert parallelism)
+when E divides the axis, else over the hidden axis (TP inside each expert) —
+see parallel/sharding.py.
+
+NOTE (DESIGN.md §4): the paper's min-search mapper is NOT used in-graph for
+routing — learned top-k routing is model semantics; the paper's technique
+manages run-time work placement.  `repro.core.mapping` is reused offline to
+analyze expert balance (benchmarks/moe_balance.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.moe
+    d = cfg.d_model
+    e_ff = m.d_ff_expert or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype))
+    p = {
+        "router": jax.random.normal(ks[0], (d, m.n_experts), dtype) * scale,
+        "wg": jax.random.normal(ks[1], (m.n_experts, d, e_ff), dtype) * scale,
+        "wu": jax.random.normal(ks[2], (m.n_experts, d, e_ff), dtype) * scale,
+        "wd": jax.random.normal(ks[3], (m.n_experts, e_ff, d), dtype)
+              * (1.0 / jnp.sqrt(jnp.asarray(e_ff, dtype))),
+    }
+    if m.n_shared:
+        from repro.models.layers import init_mlp
+        p["shared"] = init_mlp(ks[4], cfg, m.n_shared * e_ff, dtype)
+    return p
+
+
+def apply_moe(params, cfg: ModelConfig, x, *, capacity_factor=1.25,
+              group_size=256):
+    # group_size: dispatch/combine one-hots are O(cf*K*T*group_size) elems —
+    # LINEAR in group size.  512->256 halved MoE activation memory and let
+    # mixtral train_4k drop from 8 to 2 microbatches (§Perf iteration M1).
+    """x (B,S,d) -> (out (B,S,d), aux dict with router load stats)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, K = m.n_experts, m.top_k
+    if T % group_size != 0:
+        group_size = T            # tiny smoke shapes: one group
+    G = T // group_size
+    Sg = group_size
+    xt = x.reshape(G, Sg, d)
+
+    logits = (xt.astype(jnp.float32)
+              @ params["router"].astype(jnp.float32))            # (G,Sg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)               # (G,Sg,K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                   # renormalize
+
+    # Per-group capacity: each expert accepts at most C tokens per group
+    # (ceil so tiny decode groups never drop below top_k coverage).
+    C = max(1, -(-int(capacity_factor * Sg * K) // E))
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)       # (G,Sg,K,E)
+    flat = onehot.reshape(G, Sg * K, E)
+    pos_flat = jnp.cumsum(flat, axis=1) - flat                    # exclusive
+    pos = (pos_flat.reshape(G, Sg, K, E) * onehot).sum(-1)        # (G,Sg,K)
+    keep = pos < C
+    gate_vals = gate_vals * keep
+
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                            dtype=x.dtype)[..., :C]               # (G,Sg,K,C)
+    disp = jnp.einsum("gske,gskc->gsec",
+                      (onehot * keep[..., None]).astype(x.dtype),
+                      pos_oh)                                     # (G,Sg,E,C)
+    from repro.parallel.ctx import shard_hint
+    expert_in = jnp.einsum("gsec,gsd->gecd", disp, xt)            # (G,E,C,d)
+    expert_in = shard_hint(expert_in, "moe_ecd")
+    g = jnp.einsum("gecd,edf->gecf", expert_in, params["wg"].astype(x.dtype))
+    u = jnp.einsum("gecd,edf->gecf", expert_in, params["wu"].astype(x.dtype))
+    h = shard_hint(jax.nn.silu(g) * u, "moe_ecf")
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["wd"].astype(x.dtype))
+    # reshard E-sharded -> d-sharded (all-to-all) so the combine contracts
+    # the expert axis locally instead of all-reducing (G,Sg,d) partial sums
+    expert_out = shard_hint(expert_out, "moe_out")
+    comb = jnp.einsum("gske,gskc,gsk->gsec",
+                      (onehot * keep[..., None]).astype(x.dtype),
+                      pos_oh, gate_vals.astype(x.dtype))
+    out = jnp.einsum("gsec,gecd->gsd", comb, expert_out)
+
+    if m.n_shared:
+        from repro.models.layers import apply_mlp
+        out = out + apply_mlp(params["shared"], cfg, xt)
+
+    # aux: load-balance loss terms (Switch-style) + drop fraction
+    frac_tokens = onehot.sum(axis=(0, 1, 2)).astype(jnp.float32) / (T * K)
+    mean_prob = probs.mean(axis=(0, 1))
+    aux = {"load_balance": E * jnp.sum(frac_tokens * mean_prob),
+           "dropped_frac": 1.0 - keep.mean(),
+           "tokens_per_expert": frac_tokens}
+    return out.reshape(B, S, d), aux
+
+
+def moe_layer_indices(cfg: ModelConfig):
+    m = cfg.moe
+    if m is None:
+        return set()
+    return {i for i in range(cfg.n_layers)
+            if i >= m.first_dense and (i - m.first_dense) % m.every == 0}

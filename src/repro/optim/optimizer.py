@@ -1,0 +1,83 @@
+"""AdamW + LR schedules (cosine / WSD / constant), global-norm clipping,
+gradient accumulation.  Pure pytree functions (no optax dependency) so the
+optimizer state shards exactly like the params (see launch/steps.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray          # () int32
+    mu: object                 # pytree like params
+    nu: object                 # pytree like params
+
+
+def init_opt_state(params, run: RunConfig) -> OptState:
+    dt = jnp.dtype(run.opt_state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    mu=jax.tree_util.tree_map(zeros, params),
+                    nu=jax.tree_util.tree_map(zeros, params))
+
+
+def schedule(run: RunConfig, step):
+    """LR at ``step`` (traced-friendly)."""
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    total = jnp.float32(run.total_steps)
+    warm = jnp.float32(max(run.warmup_steps, 1))
+    base = jnp.float32(run.learning_rate)
+    warm_lr = base * jnp.minimum(s / warm, 1.0)
+    if run.schedule == "constant":
+        return warm_lr
+    if run.schedule == "wsd":
+        # warmup -> stable -> linear decay to 10% over the last segment
+        decay_start = total * run.decay_start_frac
+        frac = jnp.clip((s - decay_start) / jnp.maximum(total - decay_start, 1.0),
+                        0.0, 1.0)
+        return warm_lr * (1.0 - 0.9 * frac)
+    # cosine to 10%
+    prog = jnp.clip((s - warm) / jnp.maximum(total - warm, 1.0), 0.0, 1.0)
+    return warm_lr * (0.55 + 0.45 * jnp.cos(jnp.pi * prog))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def adamw_update(params, grads, opt: OptState, run: RunConfig):
+    """One AdamW step.  Returns (new_params, new_opt, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+    step = opt.step + 1
+    lr = schedule(run, step)
+    b1, b2, eps, wd = run.beta1, run.beta2, run.eps, run.weight_decay
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(m.dtype)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * gf * gf
+        mh = m / c1
+        vh = v / c2
+        delta = mh / (jnp.sqrt(vh) + eps) + wd * p.astype(m.dtype)
+        return (p.astype(m.dtype) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt.mu)
+    flat_v = jax.tree_util.tree_leaves(opt.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr}

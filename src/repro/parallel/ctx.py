@@ -1,0 +1,120 @@
+"""Sharding-hint context: model code stays mesh-agnostic.
+
+``shard_hint(x, name)`` applies ``jax.lax.with_sharding_constraint`` when a
+sharding context is active (set by launch/steps.py under a mesh) and is the
+identity otherwise (CPU smoke tests, single device).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> Optional[dict]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def sharding_rules(mesh, rules: dict):
+    """rules: name -> PartitionSpec (applied to activations by shard_hint)."""
+    prev = _rules()
+    _state.rules = {k: NamedSharding(mesh, v) for k, v in rules.items()}
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def shard_hint(x, name: str):
+    rules = _rules()
+    if rules is None or name not in rules:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules[name])
+
+
+def activation_rules(*, dp_axes=("data",), shard_act_embed=True) -> dict:
+    """Default activation PartitionSpecs by hint name.
+
+    The saved-between-layers (B,S,d) activations are sharded over BOTH the
+    dp axes (batch) and the "model" axis (embed dim, Megatron-SP style):
+    remat checkpoints otherwise dominate HBM at 4k seq x 80 layers.
+    """
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    d_ax = "model" if shard_act_embed else None
+    return {
+        "act_btd": P(dp, None, d_ax),
+        "act_btd_decode": P(dp, None, d_ax),
+        "logits": P(dp, None, "model"),
+        "act_btf": P(dp, None, "model"),
+        "act_q": P(dp, None, "model", None),
+        "act_kv": P(dp, None, None, None),
+    }
+
+
+def cell_rules(cfg, mesh, *, batch: int, multi_pod: bool,
+               layout: str = "tp_fsdp") -> dict:
+    """Per-cell activation rules: dp axes include "pod" on the multi-pod
+    mesh; head/hidden hints drop "model" where the arch's head counts
+    don't divide the axis; batch axes drop out when batch doesn't divide
+    (e.g. long_500k batch=1).  layout="zero3": batch shards over EVERY
+    axis and no activation dim touches "model" (pure FSDP)."""
+    names = mesh.axis_names
+    dp_names = ("pod", "data") if (multi_pod and "pod" in names) else ("data",)
+    if layout == "zero3":
+        dp_names = dp_names + ("model",)
+    dp_size = 1
+    for a in dp_names:
+        dp_size *= mesh.shape[a]
+    dp = (dp_names if len(dp_names) > 1 else dp_names[0]) \
+        if batch % dp_size == 0 else None
+    if layout == "zero3":
+        return {name: P(dp, None, None) if name != "act_q" and name != "act_kv"
+                else P(dp, None, None, None)
+                for name in ("act_btd", "act_btd_decode", "logits",
+                             "act_btf", "act_q", "act_kv",
+                             "moe_ecd", "moe_ecf")}
+    tp = mesh.shape["model"]
+    d_ax = "model" if cfg.d_model % tp == 0 else None
+    # Megatron-style sequence parallelism for the saved inter-layer
+    # activations: sharding S (not d) over "model" turns the backward's
+    # input-grad all-reduces into reduce-scatters (§Perf iteration D2).
+    seq_sp = layout == "sp"
+    if cfg.n_heads % tp == 0:
+        act_q = P(dp, None, "model", None)
+    else:
+        # heads don't divide TP (minicpm 36H): shard the QUERY SEQUENCE over
+        # "model" instead (ring-attention data layout, k/v replicated) so
+        # attention activations aren't 16x-replicated.  §Perf iteration 1.
+        act_q = P(dp, "model", None, None)
+    kv_ax = "model" if cfg.n_kv_heads % tp == 0 else None
+    rules = {
+        "act_btd": P(dp, "model", None) if seq_sp else P(dp, None, d_ax),
+        "act_btd_decode": P(dp, None, d_ax),
+        "logits": P(dp, None, "model"),
+        "act_btf": P(dp, None, "model"),       # FFN hidden (d_ff always | tp)
+        "act_q": act_q,
+        "act_kv": P(dp, None, kv_ax, None),
+        "xent_in": P(dp, d_ax),
+    }
+    if cfg.moe is not None:
+        if cfg.moe.n_experts % tp == 0:
+            # expert parallelism: (G,E,C,*) tensors sharded on the E axis —
+            # GSPMD turns dispatch/combine into all-to-alls.  (Resharding
+            # expert_out E->d before the combine was tried and REFUTED:
+            # +5% collective, see §Perf D3.)
+            rules["moe_ecd"] = P(dp, "model", None, None)
+            rules["moe_ecf"] = P(dp, "model", None, None)
+            rules["moe_out"] = P(dp, "model", None, None)
+        else:
+            # few big experts (mixtral 8e < tp): keep TP inside each expert;
+            # the hidden is f-sharded, dispatch stays d-replicated bf16
+            rules["moe_ecd"] = P(dp, None, None, None)
+            rules["moe_ecf"] = P(dp, None, None, "model")
+            rules["moe_out"] = P(dp, None, None, None)
+    return rules

@@ -1,0 +1,212 @@
+"""Parameter & cache PartitionSpec rules (DP/TP/EP/SP).
+
+Rules are derived from pytree paths + array shapes, per architecture:
+
+- attention: q/o projections column/row-parallel over "model" when n_heads
+  divides the axis; k/v likewise when n_kv_heads divides (else replicated —
+  GQA with few KV heads, e.g. glm4 kv=2).
+- MLP: hidden dim over "model" (column then row parallel).
+- MoE: expert axis over "model" when E divides it (expert parallelism),
+  else per-expert hidden dim over "model" (TP inside experts).
+- embeddings: vocab over "model".
+- Mamba: d_inner over "model".
+- batch over dp axes ("pod","data") for train; "data" for decode.
+- KV caches: batch over "data" when divisible, else sequence over "data"
+  (sequence parallelism for long_500k, batch=1).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def _p(*spec):
+    return P(*spec)
+
+
+def param_spec(cfg: ModelConfig, mesh: Mesh, path: str, shape) -> P:
+    """PartitionSpec for one parameter, by name and shape."""
+    tp = _axis_size(mesh, "model")
+    nq, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    # strip scan-stacking: any leading n_super axis is replicated; rules below
+    # index from the END of the shape.
+    r = len(shape)
+
+    def last(spec_tail):
+        return P(*([None] * (r - len(spec_tail)) + list(spec_tail)))
+
+    leaf = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+
+    if leaf == "tok" or leaf == "out" and parent == "embed":
+        # (V, d) / (d, V): shard vocab axis
+        big = int(np.argmax(shape[-2:]))
+        return last(["model", None] if big == 0 else [None, "model"])
+    if parent == "attn" or parent == "cross":
+        if leaf == "wq":
+            return last([None, "model"]) if nq % tp == 0 else last([None, None])
+        if leaf in ("wk", "wv"):
+            return last([None, "model"]) if nkv % tp == 0 else last([None, None])
+        if leaf == "wo":
+            return last(["model", None]) if nq % tp == 0 else last([None, None])
+        if leaf == "bq":
+            return last(["model"]) if nq % tp == 0 else last([None])
+        if leaf in ("bk", "bv"):
+            return last(["model"]) if nkv % tp == 0 else last([None])
+    if parent == "mlp" or parent == "shared":
+        if leaf in ("wg", "wu"):
+            return last([None, "model"])
+        if leaf == "wd":
+            return last(["model", None])
+    if parent == "moe":
+        E = cfg.moe.n_experts
+        if leaf == "router":
+            return last([None, None])
+        if leaf in ("wg", "wu"):
+            return last(["model", None, None]) if E % tp == 0 \
+                else last([None, None, "model"])
+        if leaf == "wd":
+            return last(["model", None, None]) if E % tp == 0 \
+                else last([None, "model", None])
+    if parent == "mamba":
+        if leaf in ("in_x", "in_z"):
+            return last([None, "model"])
+        if leaf == "out_proj":
+            return last(["model", None])
+        if leaf in ("conv_w", "conv_b", "dt_bias", "D"):
+            return last(["model"]) if len(shape) >= 1 and shape[-1] % tp == 0 \
+                else last([None])
+        if leaf == "A_log":
+            return last(["model", None])
+        if leaf == "x_proj":
+            return last(["model", None])
+        if leaf == "dt_proj":
+            return last([None, "model"])
+    if leaf == "vision_adapter":
+        return last([None, "model"])
+    # norms, router, small vectors: replicate
+    return P()
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, leaf in flat:
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        out.append(("/".join(parts), leaf))
+    return out, treedef
+
+
+def _add_fsdp(spec: P, shape, dp_axes: tuple, dp_size: int) -> P:
+    """ZeRO-3: additionally shard the largest free dim over the DP axes.
+
+    GSPMD inserts the per-layer all-gather (fwd) / reduce-scatter (bwd)
+    automatically; without this, replicated params + fp32 Adam state
+    overflow HBM for the >50B archs.
+    """
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    cand, cand_sz = -1, 0
+    for i, (e, s) in enumerate(zip(entries, shape)):
+        if e is None and s % dp_size == 0 and s >= 1024 and s > cand_sz:
+            cand, cand_sz = i, s
+    if cand >= 0:
+        entries[cand] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    return P(*entries)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape,
+                    *, fsdp: bool = True, tp: bool = True) -> Any:
+    """NamedSharding pytree matching a params (shape) pytree.
+
+    tp=False is the pure-ZeRO-3 layout: no tensor parallelism at all,
+    every parameter sharded over ALL mesh axes on its largest dim — zero
+    in-layer activation collectives, one param all-gather per layer.
+    Wins when tokens-per-chip is small (see EXPERIMENTS.md §Perf D1)."""
+    names = mesh.axis_names
+    dp_ax = ("pod", "data") if "pod" in names else ("data",)
+    if not tp:
+        dp_ax = dp_ax + ("model",)
+    dp_size = 1
+    for a in dp_ax:
+        dp_size *= mesh.shape[a]
+    flat, treedef = _tree_paths(params_shape)
+    specs = []
+    for path, leaf in flat:
+        spec = param_spec(cfg, mesh, path, leaf.shape) if tp else P()
+        if fsdp:
+            spec = _add_fsdp(spec, leaf.shape, dp_ax, dp_size)
+        specs.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def cache_spec(cfg: ModelConfig, mesh: Mesh, path: str, shape,
+               *, batch: int) -> P:
+    """Decode-cache sharding: DP over batch when divisible, else SP over seq."""
+    names = mesh.axis_names
+    dp_names = ("pod", "data") if "pod" in names else ("data",)
+    dp = 1
+    for a in dp_names:
+        dp *= _axis_size(mesh, a)
+    dp_entry = dp_names if len(dp_names) > 1 else dp_names[0]
+    tp = _axis_size(mesh, "model")
+    leaf = path.split("/")[-1]
+    r = len(shape)
+
+    def last(spec_tail):
+        return P(*([None] * (r - len(spec_tail)) + list(spec_tail)))
+
+    if leaf in ("k", "v", "ck", "cv"):          # (B, S, nkv, hd)
+        # heads shard over "model" only when divisible (GQA often isn't);
+        # leftover axes shard the SEQUENCE dim — decode attention over a
+        # seq-sharded cache distributes flash-decoding style (partial
+        # softmax + tiny stat all-reduces, inserted by GSPMD).
+        kv_ax = "model" if cfg.n_kv_heads % tp == 0 else None
+        batch_ax = dp_entry if batch % dp == 0 else None
+        seq_axes = []
+        S = shape[-3]
+        if batch_ax is None and S % dp == 0:
+            seq_axes.extend(dp_names)
+        if kv_ax is None and S % (tp * max(dp if seq_axes else 1, 1)) == 0:
+            seq_axes.append("model")
+        seq_entry = (tuple(seq_axes) if len(seq_axes) > 1
+                     else (seq_axes[0] if seq_axes else None))
+        return last([batch_ax, seq_entry, kv_ax, None])
+    if leaf == "h":                              # (B, d_in, N) mamba state
+        din_ax = "model" if shape[-2] % tp == 0 else None
+        if batch % dp == 0:
+            return last([dp_entry, din_ax, None])
+        return last([None, din_ax, None])
+    if leaf == "conv":                           # (B, d_conv-1, d_in)
+        din_ax = "model" if shape[-1] % tp == 0 else None
+        if batch % dp == 0:
+            return last([dp_entry, None, din_ax])
+        return last([None, None, din_ax])
+    return P()
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_shape, batch) -> Any:
+    flat, treedef = _tree_paths(cache_shape)
+    specs = [NamedSharding(mesh, cache_spec(cfg, mesh, path, leaf.shape,
+                                            batch=batch))
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_spec(mesh: Mesh, *, multi_pod: bool) -> P:
+    return P(("pod", "data") if multi_pod else "data")

@@ -1,0 +1,190 @@
+"""Continuous-batching serving engine managed by the paper's clustered
+task manager.
+
+Topology (DESIGN.md §2): the fleet is k clusters (pods / mesh slices); each
+cluster scheduler owns its device groups' exact load table and a
+beacon-synced view of remote clusters.  A request is placed in two stages —
+stage 1 picks the cluster by min-search over the (possibly stale) views,
+stage 2 picks the device group by min-search over the exact local table —
+and never migrates (map-once, Sec 4.1).  Cluster schedulers exchange
+``status-beacon`` messages only when their load drifted by >= dn_th
+(Sec 4.2), so scheduler chatter is O(load-change/dn_th), not O(requests).
+
+The engine below is the *control plane*; the data plane (model decode
+steps) runs through launch/steps.py.  `FleetSim` wires k schedulers +
+worker groups for the host-level simulation used in examples/ and tests;
+on a real fleet each ClusterScheduler runs on its pod's coordinator.
+
+Fault tolerance: a dead worker group's in-flight requests re-enter the
+global queue (map-once applies to healthy placement, not failure
+recovery); its load column is tombstoned so min-search never picks it.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core import beacons as B
+from repro.core.messages import Message, MsgType, beacon, task_start
+
+
+@dataclass(order=True)
+class Request:
+    sort_key: float
+    rid: int = field(compare=False)
+    prompt_len: int = field(compare=False, default=128)
+    max_new: int = field(compare=False, default=64)
+    arrived: float = field(compare=False, default=0.0)
+    # filled by the engine
+    cluster: int = field(compare=False, default=-1)
+    group: int = field(compare=False, default=-1)
+    done: int = field(compare=False, default=0)
+    finished_at: float = field(compare=False, default=-1.0)
+
+
+def request_cost(req: Request) -> float:
+    """Load contribution of a request (decode slots + prefill amortized)."""
+    return 1.0 + req.prompt_len / 4096.0
+
+
+class ClusterScheduler:
+    """One GMN: exact local (groups,) load table + stale remote summaries."""
+
+    def __init__(self, cluster_id: int, k: int, n_groups: int, dn_th: int):
+        self.cid = cluster_id
+        self.k = k
+        self.n_groups = n_groups
+        self.dn_th = dn_th
+        self.local = np.zeros(n_groups, np.float64)
+        self.remote = np.zeros(k, np.float64)     # beacon view (self exact)
+        self.last_bcast = 0.0
+        self.alive = np.ones(n_groups, bool)
+        self.tx_log: list[Message] = []
+
+    # -- stage 2: exact local min-search ------------------------------------
+    def place_local(self, req: Request) -> int:
+        masked = np.where(self.alive, self.local, np.inf)
+        g = int(np.argmin(masked))
+        self.local[g] += request_cost(req)
+        req.cluster, req.group = self.cid, g
+        self.tx_log.append(task_start(self.cid, g, req.rid, 0))
+        return g
+
+    def release(self, req: Request):
+        self.local[req.group] -= request_cost(req)
+
+    def total_load(self) -> float:
+        return float(self.local[self.alive].sum())
+
+    # -- threshold beacons ---------------------------------------------------
+    def maybe_beacon(self) -> Optional[Message]:
+        load = self.total_load()
+        if abs(load - self.last_bcast) >= self.dn_th and self.k > 1:
+            self.last_bcast = load
+            msg = beacon(self.cid, int(load))
+            self.tx_log.append(msg)
+            return msg
+        return None
+
+    def recv_beacon(self, msg: Message):
+        self.remote[msg.src] = msg.data[0]
+
+    def kill_group(self, g: int):
+        self.alive[g] = False
+        self.local[g] = 0.0
+
+    # -- stage 1: cluster choice over (stale) views --------------------------
+    def pick_cluster(self) -> int:
+        view = self.remote.copy()
+        view[self.cid] = self.total_load()         # own view exact
+        order = (np.arange(self.k) + self.cid) % self.k
+        return int(order[int(np.argmin(view[order]))])
+
+
+class FleetSim:
+    """k cluster schedulers + simple decode-rate worker model.
+
+    Used by examples/serve_clustered.py and tests to exercise the control
+    plane end-to-end (placement quality, beacon volume, failure recovery)
+    without TPU hardware."""
+
+    def __init__(self, k: int = 4, groups_per_cluster: int = 8,
+                 dn_th: int = 4, tokens_per_tick: float = 8.0):
+        self.k = k
+        self.schedulers = [ClusterScheduler(c, k, groups_per_cluster, dn_th)
+                           for c in range(k)]
+        self.tokens_per_tick = tokens_per_tick
+        self.active: dict[int, list[Request]] = {}
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self.beacons_tx = 0
+        self.t = 0.0
+        self._counter = itertools.count()
+
+    def submit(self, req: Request, via_cluster: Optional[int] = None):
+        entry = via_cluster if via_cluster is not None \
+            else next(self._counter) % self.k
+        sched = self.schedulers[entry]
+        target = sched.pick_cluster()               # stage 1 (stale view ok)
+        tsched = self.schedulers[target]
+        g = tsched.place_local(req)                 # stage 2 (exact)
+        self.active.setdefault(target * 1000 + g, []).append(req)
+        self._broadcast(tsched)
+
+    def _broadcast(self, sched: ClusterScheduler):
+        msg = sched.maybe_beacon()
+        if msg is not None:
+            self.beacons_tx += 1
+            for s in self.schedulers:
+                if s.cid != sched.cid:
+                    s.recv_beacon(msg)
+
+    def tick(self, dt: float = 1.0):
+        """Advance decode: each group serves its batch at a shared rate."""
+        self.t += dt
+        for key, reqs in list(self.active.items()):
+            c, g = divmod(key, 1000)
+            sched = self.schedulers[c]
+            if not sched.alive[g] or not reqs:
+                if not reqs:
+                    self.active.pop(key)
+                continue
+            rate = self.tokens_per_tick * dt / max(len(reqs), 1)
+            still = []
+            for r in reqs:
+                r.done += rate
+                if r.done >= r.max_new:
+                    r.finished_at = self.t
+                    sched.release(r)
+                    self.finished.append(r)
+                else:
+                    still.append(r)
+            if still:
+                self.active[key] = still
+            else:
+                self.active.pop(key)
+            self._broadcast(sched)
+
+    def kill(self, cluster: int, group: int):
+        """Fail a worker group: requeue its in-flight requests elsewhere."""
+        sched = self.schedulers[cluster]
+        sched.kill_group(group)
+        orphans = self.active.pop(cluster * 1000 + group, [])
+        self._broadcast(sched)
+        for r in orphans:
+            r.cluster = r.group = -1
+            self.submit(r)
+        return len(orphans)
+
+    def loads(self) -> np.ndarray:
+        return np.stack([s.local for s in self.schedulers])
+
+    def imbalance(self) -> float:
+        l = self.loads()
+        alive = np.stack([s.alive for s in self.schedulers])
+        vals = l[alive]
+        return float(vals.max() / max(vals.mean(), 1e-9)) if vals.size else 0.0

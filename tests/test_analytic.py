@@ -1,0 +1,38 @@
+"""Analytic model (Eqns 1-4, Fig 2a)."""
+import numpy as np
+
+from repro.core import analytic as A
+
+
+def test_omega_components():
+    p = A.TimingParams()
+    # k=1: no global stage, full local stage over m PEs
+    assert A.omega_cmp(256, 100, 1, p.c_s) == 100 * 8 * 8
+    # k=m: no local stage
+    assert A.omega_cmp(256, 256, 256, p.c_s) == np.log2(256) * 8 * 8
+    # message overhead is convex in k with min at k=sqrt(m)
+    ks = np.array([1, 4, 16, 64, 256])
+    msg = A.omega_msg(256, 100, ks, p.c_b)
+    assert msg.argmin() == 2     # k=16=sqrt(256)
+
+
+def test_speedup_bounded_by_ideal():
+    s = A.speedup(256, 256, np.array([1, 8, 16, 64, 256]))
+    ideal = 256  # n tasks on m>=n PEs
+    assert np.all(s <= ideal)
+    assert np.all(s > 0)
+
+
+def test_fig2a_optimum_in_paper_band():
+    out = A.fig2a()
+    for cs, curve in out.items():
+        best_k = curve["k"][int(np.argmax(curve["speedup"]))]
+        if cs >= 8.0:  # paper: recursive startup favours 32-64 nodes
+            assert 16 <= best_k <= 64, (cs, best_k)
+
+
+def test_optimal_k_monotone_in_cs():
+    """Costlier selection pushes the optimum to more clusters."""
+    k_cheap = A.optimal_k(256, 256, A.TimingParams(c_s=1.0))
+    k_dear = A.optimal_k(256, 256, A.TimingParams(c_s=64.0))
+    assert k_dear >= k_cheap

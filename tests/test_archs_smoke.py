@@ -1,0 +1,96 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step + a few decode steps on CPU; asserts shapes and finiteness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import (ARCH_IDS, RunConfig, get_config, reduced_config,
+                           SHAPES, shape_supported)
+from repro.launch.steps import make_train_step
+from repro.models import model as MDL
+from repro.optim import optimizer as OPT
+
+
+def _extra(cfg, B, key):
+    extra = {}
+    if cfg.frontend == "vision":
+        extra["patches"] = jax.random.normal(
+            key, (B, cfg.vision_tokens, cfg.d_model))
+    if cfg.family == "encdec":
+        extra["frames"] = jax.random.normal(
+            key, (B, cfg.enc_seq_len, cfg.d_model))
+    return extra
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch, key):
+    cfg = reduced_config(get_config(arch))
+    B, S = 2, 16
+    params = MDL.init_model(key, cfg, jnp.float32)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    extra = _extra(cfg, B, key)
+
+    logits, aux = MDL.forward(params, cfg, tokens, extra=extra, remat="none")
+    S_out = S + (cfg.vision_tokens if cfg.frontend == "vision" else 0)
+    assert logits.shape == (B, S_out, cfg.padded_vocab)
+    assert jnp.isfinite(logits).all()
+
+    run = RunConfig(param_dtype="float32", total_steps=10, warmup_steps=1)
+    step = make_train_step(cfg, run)
+    opt = OPT.init_opt_state(params, run)
+    batch = {"tokens": tokens, "labels": tokens, **extra}
+    params2, opt2, metrics = step(params, opt, batch)
+    assert jnp.isfinite(metrics["loss"])
+    assert int(opt2.step) == 1
+    # params actually moved
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a - b).max()), params, params2)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_steps(arch, key):
+    cfg = reduced_config(get_config(arch))
+    B = 2
+    params = MDL.init_model(key, cfg, jnp.float32)
+    enc_out = None
+    if cfg.family == "encdec":
+        frames = jax.random.normal(key, (B, cfg.enc_seq_len, cfg.d_model))
+        enc_out = MDL._encode(params, cfg, frames, remat="none")
+    cache = MDL.init_cache(cfg, B, 32, jnp.float32, enc_out=enc_out,
+                           params=params)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for pos in range(4):
+        logits, cache = MDL.decode_step(params, cfg, cache, tok,
+                                        jnp.int32(pos))
+        assert logits.shape == (B, 1, cfg.padded_vocab)
+        assert jnp.isfinite(logits).all()
+        tok = logits[:, -1:].argmax(-1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_published_config_registered(arch):
+    cfg = get_config(arch)
+    # the full config instantiates ABSTRACTLY (no allocation) and its layer
+    # plan covers every layer
+    import functools
+    shapes = jax.eval_shape(
+        functools.partial(MDL.init_model, cfg=cfg, dtype=jnp.bfloat16),
+        jax.random.PRNGKey(0))
+    import math
+    n_params = sum(math.prod(l.shape)
+                   for l in jax.tree_util.tree_leaves(shapes))
+    # within 3% of the analytic count (analytic ignores vocab padding)
+    assert abs(n_params - cfg.param_count()) / cfg.param_count() < 0.03
+
+
+def test_long_context_support_flags():
+    assert get_config("falcon_mamba_7b").supports_long_context
+    assert get_config("jamba_v01_52b").supports_long_context
+    assert get_config("mixtral_8x22b").supports_long_context
+    for a in ("qwen2_72b", "olmo_1b", "glm4_9b", "whisper_medium",
+              "minicpm_2b", "internvl2_2b", "deepseek_moe_16b"):
+        assert not get_config(a).supports_long_context
+        assert not shape_supported(get_config(a), SHAPES["long_500k"])

@@ -1,0 +1,52 @@
+"""Threshold beacon state machine (paper Sec 4.2)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import beacons as B
+
+
+def test_fires_on_threshold():
+    s = B.BeaconState.create(k=4, dn_th=4)
+    s = B.update(s, 0, 3)
+    assert s.tx_count == 0                 # below threshold
+    s = B.update(s, 0, 4)
+    assert s.tx_count == 1
+    assert (s.view[:, 0] == 4).all()       # every node received
+    s = B.update(s, 0, 6)
+    assert s.tx_count == 1                 # drift 2 < 4
+
+
+def test_k1_never_broadcasts():
+    s = B.BeaconState.create(k=1, dn_th=1)
+    for load in (5, 50, 500):
+        s = B.update(s, 0, load)
+    assert s.tx_count == 0
+
+
+@given(st.lists(st.integers(0, 200), min_size=1, max_size=200),
+       st.integers(1, 32))
+@settings(max_examples=50, deadline=None)
+def test_beacon_count_bounded_by_total_drift(loads, dn_th):
+    """#broadcasts <= total load variation / dn_th (+1)."""
+    s = B.BeaconState.create(k=2, dn_th=dn_th)
+    prev = 0
+    drift = 0
+    for ld in loads:
+        s = B.update(s, 0, ld)
+        drift += abs(ld - prev)
+        prev = ld
+    assert s.tx_count <= drift // dn_th + 1
+    # view error vs truth bounded by threshold after last update
+    assert abs(int(s.view[1, 0]) - loads[-1]) < dn_th
+
+
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 50)),
+                min_size=1, max_size=100))
+@settings(max_examples=30, deadline=None)
+def test_staleness_bounded(updates):
+    s = B.BeaconState.create(k=4, dn_th=5)
+    true = np.zeros(4, np.int64)
+    for node, load in updates:
+        s = B.update(s, node, load)
+        true[node] = load
+    assert B.staleness(s, true) < 5

@@ -1,0 +1,87 @@
+"""Decode-vs-forward consistency: feeding tokens one at a time through the
+cached decode path must reproduce the teacher-forced forward logits.
+
+This is the strongest end-to-end correctness check for the KV cache, RoPE
+offsets, SWA ring buffer, SSM state carry and hybrid interleaving.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.models import model as MDL
+
+# MoE archs excluded from exact equality: capacity-based token dropping
+# depends on grouping, which differs between the two paths by design.
+EXACT_ARCHS = ["qwen2_72b", "olmo_1b", "glm4_9b", "minicpm_2b",
+               "falcon_mamba_7b", "internvl2_2b"]
+
+
+@pytest.mark.parametrize("arch", EXACT_ARCHS)
+def test_decode_matches_forward(arch, key):
+    cfg = reduced_config(get_config(arch))
+    B, S = 2, 12
+    params = MDL.init_model(key, cfg, jnp.float32)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    extra = {}
+    if cfg.frontend == "vision":
+        # frontends prepend tokens; decode-side handling of the prefix is a
+        # prefill concern — test text-only here
+        cfg = reduced_config(get_config(arch), vision_tokens=0)
+        import dataclasses
+        cfg = dataclasses.replace(cfg, frontend="none")
+        params = MDL.init_model(key, cfg, jnp.float32)
+
+    full_logits, _ = MDL.forward(params, cfg, tokens, extra=extra,
+                                 remat="none")
+    cache = MDL.init_cache(cfg, B, S + 2, jnp.float32)
+    outs = []
+    for t in range(S):
+        logits, cache = MDL.decode_step(params, cfg, cache, tokens[:, t:t+1],
+                                        jnp.int32(t))
+        outs.append(logits[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    err = jnp.abs(dec_logits - full_logits).max()
+    assert err < 2e-3, f"{arch}: decode/forward mismatch {err}"
+
+
+def test_swa_ring_matches_forward():
+    """Mixtral-style sliding window: ring cache equals windowed forward."""
+    cfg = reduced_config(get_config("mixtral_8x22b"))
+    import dataclasses
+    cfg = dataclasses.replace(cfg, moe=None, d_ff=64, sliding_window=6)
+    key = jax.random.PRNGKey(7)
+    B, S = 1, 14                      # S > 2*window exercises wraparound
+    params = MDL.init_model(key, cfg, jnp.float32)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    full_logits, _ = MDL.forward(params, cfg, tokens, remat="none")
+    cache = MDL.init_cache(cfg, B, S, jnp.float32)
+    outs = []
+    for t in range(S):
+        logits, cache = MDL.decode_step(params, cfg, cache, tokens[:, t:t+1],
+                                        jnp.int32(t))
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    err = jnp.abs(dec - full_logits).max()
+    assert err < 2e-3, err
+
+
+def test_hybrid_decode_matches_forward():
+    """Jamba-like hybrid without MoE: mamba+attn interleave decodes right."""
+    cfg = reduced_config(get_config("jamba_v01_52b"))
+    import dataclasses
+    cfg = dataclasses.replace(cfg, moe=None, d_ff=64)
+    key = jax.random.PRNGKey(9)
+    B, S = 1, 10
+    params = MDL.init_model(key, cfg, jnp.float32)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    full_logits, _ = MDL.forward(params, cfg, tokens, remat="none")
+    cache = MDL.init_cache(cfg, B, S, jnp.float32)
+    outs = []
+    for t in range(S):
+        logits, cache = MDL.decode_step(params, cfg, cache, tokens[:, t:t+1],
+                                        jnp.int32(t))
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    err = jnp.abs(dec - full_logits).max()
+    assert err < 2e-3, err

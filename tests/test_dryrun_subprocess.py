@@ -1,0 +1,27 @@
+"""The dry-run entry point works end-to-end (subprocess: it must set
+XLA_FLAGS before jax init).  One cheap cell per mesh keeps this fast."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_dryrun_one_cell(mesh, tmp_path):
+    out = tmp_path / "dr.json"
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "olmo_1b",
+         "--shape", "decode_32k", "--mesh", mesh, "--out", str(out)],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=540)
+    assert res.returncode == 0, res.stderr[-2000:]
+    rows = json.loads(out.read_text())
+    assert rows[0]["status"] == "ok"
+    assert rows[0]["fits_16gb"]
+    assert rows[0]["flops_per_chip"] > 0
+    assert rows[0]["t_memory_s"] > 0

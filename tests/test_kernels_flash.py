@@ -1,0 +1,46 @@
+"""Pallas flash attention: shape/dtype sweep vs the jnp oracle
+(interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+
+CASES = [
+    # (B, Sq, Skv, Hq, Hkv, D, causal, window)
+    (2, 128, 128, 4, 2, 64, True, 0),
+    (1, 256, 256, 4, 4, 32, True, 0),
+    (2, 128, 128, 8, 2, 64, False, 0),
+    (1, 256, 256, 2, 2, 64, True, 64),      # sliding window
+    (1, 192, 192, 2, 1, 64, True, 0),       # non-multiple of block
+    (1, 128, 256, 2, 2, 64, True, 0),       # Sq < Skv (chunked prefill)
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_vs_ref(case, dtype):
+    B, Sq, Skv, Hq, Hkv, D, causal, win = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, sliding_window=win,
+                          block_q=64, block_k=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, sliding_window=win)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    assert jnp.abs(out.astype(jnp.float32)
+                   - want.astype(jnp.float32)).max() < tol
+
+
+def test_block_shape_independence():
+    """Result must not depend on the BlockSpec tiling."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    outs = [flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+            for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]]
+    for o in outs[1:]:
+        assert jnp.allclose(o, outs[0], atol=1e-5)

@@ -1,0 +1,110 @@
+"""Layer-level properties: RoPE, norms, GQA attention equivalences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced_config
+from repro.kernels import ref
+from repro.models import layers as L
+
+
+def test_rope_preserves_norm():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 16, 4, 64))
+    cos, sin = L.rope_freqs(64, 10_000.0, jnp.arange(16))
+    y = L.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(jnp.linalg.norm(x, axis=-1),
+                               jnp.linalg.norm(y, axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_position_property():
+    """q_i . k_j after RoPE depends only on (i - j)."""
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (1, 1, 1, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 64))
+
+    def dot_at(i, j):
+        ci, si = L.rope_freqs(64, 10_000.0, jnp.asarray([i]))
+        cj, sj = L.rope_freqs(64, 10_000.0, jnp.asarray([j]))
+        qi = L.apply_rope(q, ci, si)
+        kj = L.apply_rope(k, cj, sj)
+        return float((qi * kj).sum())
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(12, 10), rel=1e-4)
+    assert dot_at(7, 7) == pytest.approx(dot_at(0, 0), rel=1e-4)
+
+
+def test_rms_norm_scale_equivariance():
+    """RMSNorm(c*x) == RMSNorm(x) for c > 0 (eps-negligible regime)."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 32)) * 10
+    p = {"scale": jnp.ones((32,))}
+    a = L.apply_norm(p, x, "rms")
+    b = L.apply_norm(p, 7.0 * x, "rms")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_nonparam_norm_zero_mean_unit_var():
+    x = jax.random.normal(jax.random.PRNGKey(3), (8, 64)) * 3 + 5
+    out = L.apply_norm({}, x, "nonparam")
+    assert float(jnp.abs(out.mean(-1)).max()) < 1e-4
+    assert float(jnp.abs(out.var(-1) - 1).max()) < 1e-2
+
+
+def test_gqa_with_equal_heads_is_mha():
+    """GQA ref with Hkv == Hq must equal explicit per-head attention."""
+    key = jax.random.PRNGKey(4)
+    q = jax.random.normal(key, (1, 8, 4, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 8, 4, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 8, 4, 16))
+    out = ref.attention_ref(q, k, v, causal=True)
+    # manual per-head
+    for h in range(4):
+        s = (q[0, :, h] @ k[0, :, h].T) / np.sqrt(16)
+        mask = np.tril(np.ones((8, 8), bool))
+        s = jnp.where(mask, s, -jnp.inf)
+        o = jax.nn.softmax(s, -1) @ v[0, :, h]
+        np.testing.assert_allclose(np.asarray(out[0, :, h]), np.asarray(o),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_gqa_grouping_maps_right_kv_head():
+    """With 2 kv heads, q heads 0,1 use kv 0; q heads 2,3 use kv 1."""
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (1, 4, 4, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 4, 2, 8))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 4, 2, 8))
+    out = ref.attention_ref(q, k, v, causal=False)
+    kk = jnp.repeat(k, 2, axis=2)
+    vv = jnp.repeat(v, 2, axis=2)
+    want = ref.attention_ref(q, kk, vv, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5)
+
+
+@given(st.integers(1, 3), st.integers(4, 24), st.integers(0, 1))
+@settings(max_examples=15, deadline=None)
+def test_sliding_window_subset_property(b, s, causal_i):
+    """Windowed attention == full attention when window >= seq length."""
+    key = jax.random.PRNGKey(b * 100 + s)
+    q = jax.random.normal(key, (b, s, 2, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, 2, 8))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, 2, 8))
+    causal = bool(causal_i)
+    full = ref.attention_ref(q, k, v, causal=causal, sliding_window=0)
+    wide = ref.attention_ref(q, k, v, causal=causal, sliding_window=s + 5)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(wide), atol=1e-5)
+
+
+def test_qkv_bias_changes_output():
+    cfg = reduced_config(get_config("qwen2_72b"))
+    key = jax.random.PRNGKey(6)
+    p = L.init_attention(key, cfg, jnp.float32)
+    assert "bq" in p          # qwen2 has QKV bias
+    x = jax.random.normal(key, (1, 8, cfg.d_model))
+    out0 = L.attention_block(p, cfg, x)
+    p2 = dict(p)
+    p2["bq"] = jnp.ones_like(p["bq"])
+    out1 = L.attention_block(p2, cfg, x)
+    assert float(jnp.abs(out0 - out1).max()) > 1e-6

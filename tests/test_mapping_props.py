@@ -1,0 +1,60 @@
+"""Property-based tests (hypothesis) for the two-stage mapper."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mapping as M
+from repro.kernels import ref
+
+
+@st.composite
+def load_matrix(draw):
+    k = draw(st.sampled_from([1, 2, 4, 8]))
+    mpk = draw(st.sampled_from([1, 2, 4, 8]))
+    # subnormals excluded: XLA flushes them to zero (FTZ) while numpy keeps
+    # them, so argmin ties resolve differently — not a scheduler bug
+    vals = draw(st.lists(st.floats(0, 100, allow_nan=False, width=32,
+                                   allow_subnormal=False),
+                         min_size=k * mpk, max_size=k * mpk))
+    return np.array(vals, np.float32).reshape(k, mpk)
+
+
+@given(load_matrix())
+@settings(max_examples=50, deadline=None)
+def test_minsearch_picks_global_min_cluster(loads):
+    c, p = ref.hier_minsearch_ref(jnp.asarray(loads))
+    sums = loads.sum(axis=1)
+    assert sums[int(c)] == sums.min()
+    assert loads[int(c), int(p)] == loads[int(c)].min()
+
+
+@given(load_matrix(), st.integers(1, 32))
+@settings(max_examples=30, deadline=None)
+def test_assign_preserves_mass(loads, n_tasks):
+    costs = jnp.ones((n_tasks,), jnp.float32)
+    assigns, new_loads = ref.assign_tasks_ref(jnp.asarray(loads), costs)
+    assert np.isclose(float(new_loads.sum()),
+                      float(loads.sum()) + n_tasks, atol=1e-3)
+    a = np.asarray(assigns)
+    assert (a[:, 0] >= 0).all() and (a[:, 0] < loads.shape[0]).all()
+    assert (a[:, 1] >= 0).all() and (a[:, 1] < loads.shape[1]).all()
+
+
+@given(st.integers(1, 8), st.integers(1, 8), st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_uniform_costs_balance(k, mpk, n_tasks):
+    """Mapping equal tasks onto empty clusters ends within 1 of balanced."""
+    loads = jnp.zeros((k, mpk), jnp.float32)
+    _, new_loads = ref.assign_tasks_ref(loads, jnp.ones((n_tasks,)))
+    nl = np.asarray(new_loads)
+    assert nl.max() - nl.min() <= 1.0 + 1e-6
+
+
+@given(st.integers(2, 64), st.integers(1, 16))
+@settings(max_examples=20, deadline=None)
+def test_fork_tree_targets_bounds(n_tasks, k):
+    mpk = 4
+    ns, depth = M.fork_tree_targets(n_tasks, k, mpk)
+    assert 1 <= ns <= k
+    assert ns >= min(k, -(-n_tasks // mpk))  # enough targets for capacity
+    assert 2 ** depth >= ns

@@ -1,0 +1,26 @@
+"""Message protocol pack/unpack (paper Table 1/2)."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.messages import (BROADCAST, Message, MsgType, beacon,
+                                 join_exit, task_start)
+
+
+@given(st.sampled_from(list(MsgType)), st.integers(0, 255),
+       st.integers(-1, 255), st.integers(0, 7), st.integers(0, 1),
+       st.lists(st.integers(-2**31, 2**31 - 1), max_size=3))
+@settings(max_examples=100, deadline=None)
+def test_roundtrip(typ, src, dst, prio, flag, data):
+    m = Message(typ, src, dst, prio, flag, tuple(data))
+    m2 = Message.unpack(m.pack())
+    assert m2.type == typ and m2.src == src and m2.dst == dst
+    assert m2.prio == prio and m2.flag == flag
+    assert list(m2.data[:len(data)]) == list(data)
+
+
+def test_helpers():
+    b = beacon(3, 42)
+    assert b.dst == BROADCAST and b.flag == 1 and b.data[0] == 42
+    t = task_start(0, 5, 0x1000, 0x2000)
+    assert t.type == MsgType.TASK_START and t.data == (0x1000, 0x2000)
+    j = join_exit(7, 0, 0xBEEF)
+    assert j.type == MsgType.JOIN_EXIT

@@ -1,0 +1,57 @@
+"""Optimizer: AdamW convergence, schedules, clipping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RunConfig
+from repro.optim import optimizer as OPT
+
+
+def test_adamw_minimizes_quadratic():
+    run = RunConfig(learning_rate=0.1, weight_decay=0.0, schedule="constant",
+                    warmup_steps=1, total_steps=200, grad_clip=1e9)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = OPT.init_opt_state(params, run)
+    loss = lambda p: jnp.sum(p["w"] ** 2)  # noqa: E731
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt, _ = OPT.adamw_update(params, g, opt, run)
+    assert float(loss(params)) < 1e-3
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, gn = OPT.clip_by_global_norm(g, 1.0)
+    assert float(gn) > 100
+    total = jnp.sqrt(sum(jnp.sum(x ** 2)
+                         for x in jax.tree_util.tree_leaves(clipped)))
+    assert abs(float(total) - 1.0) < 1e-5
+
+
+@pytest.mark.parametrize("sched", ["cosine", "wsd", "constant"])
+def test_schedule_shapes(sched):
+    run = RunConfig(learning_rate=1e-3, schedule=sched, warmup_steps=10,
+                    total_steps=100, decay_start_frac=0.8)
+    lrs = [float(OPT.schedule(run, jnp.int32(s))) for s in range(101)]
+    assert lrs[0] < lrs[10] * 0.2            # warmup
+    assert abs(lrs[10] - 1e-3) < 1e-9        # peak
+    if sched == "constant":
+        assert lrs[-1] == pytest.approx(1e-3)
+    if sched == "wsd":
+        # stable plateau until 80%, then linear decay
+        assert lrs[50] == pytest.approx(1e-3)
+        assert lrs[79] == pytest.approx(1e-3)
+        assert lrs[100] < lrs[80]
+        assert lrs[100] == pytest.approx(1e-4, rel=0.1)
+    if sched == "cosine":
+        assert lrs[100] == pytest.approx(1e-4, rel=0.1)
+        assert lrs[55] < lrs[30]
+
+
+def test_wsd_vs_cosine_mid_training():
+    """The WSD selling point: full LR deep into training."""
+    wsd = RunConfig(schedule="wsd", warmup_steps=10, total_steps=100)
+    cos = RunConfig(schedule="cosine", warmup_steps=10, total_steps=100)
+    mid = jnp.int32(60)
+    assert float(OPT.schedule(wsd, mid)) > float(OPT.schedule(cos, mid))

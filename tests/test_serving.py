@@ -1,0 +1,84 @@
+"""Serving control plane: two-stage placement, beacons, failure recovery."""
+import numpy as np
+import pytest
+
+from repro.serving.engine import ClusterScheduler, FleetSim, Request
+
+
+def _reqs(n, max_new=16):
+    return [Request(sort_key=float(i), rid=i, prompt_len=64, max_new=max_new)
+            for i in range(n)]
+
+
+def test_two_stage_balances_across_clusters():
+    fleet = FleetSim(k=4, groups_per_cluster=4, dn_th=1)
+    for r in _reqs(64):
+        fleet.submit(r)
+    per_cluster = fleet.loads().sum(axis=1)
+    assert per_cluster.max() / per_cluster.min() < 1.3
+    assert fleet.imbalance() < 1.3
+
+
+def test_beacon_volume_scales_with_threshold():
+    counts = {}
+    for th in (1, 8):
+        fleet = FleetSim(k=4, groups_per_cluster=4, dn_th=th)
+        for r in _reqs(128):
+            fleet.submit(r)
+        while fleet.active:
+            fleet.tick()
+        counts[th] = fleet.beacons_tx
+    assert counts[1] > counts[8]
+
+
+def test_requests_complete():
+    fleet = FleetSim(k=2, groups_per_cluster=2, dn_th=4)
+    reqs = _reqs(16, max_new=8)
+    for r in reqs:
+        fleet.submit(r)
+    for _ in range(100):
+        if not fleet.active:
+            break
+        fleet.tick()
+    assert len(fleet.finished) == 16
+    assert all(r.finished_at >= 0 for r in reqs)
+    # all load released
+    assert fleet.loads().sum() == pytest.approx(0.0, abs=1e-9)
+
+
+def test_failure_requeues_and_tombstones():
+    fleet = FleetSim(k=2, groups_per_cluster=2, dn_th=4)
+    for r in _reqs(16):
+        fleet.submit(r)
+    orphans = fleet.kill(0, 0)
+    assert orphans > 0
+    # dead group never picked again
+    for r in _reqs(32):
+        fleet.submit(r)
+    assert fleet.schedulers[0].local[0] == 0.0
+    for _ in range(200):
+        if not fleet.active:
+            break
+        fleet.tick()
+    assert len(fleet.finished) == 48     # nothing lost
+
+
+def test_stale_view_still_places():
+    """With a huge threshold views go stale; placement must still work and
+    skew toward the entry scheduler's own exact view."""
+    fleet = FleetSim(k=4, groups_per_cluster=2, dn_th=10_000)
+    for r in _reqs(64):
+        fleet.submit(r)
+    assert fleet.beacons_tx == 0
+    assert fleet.loads().sum() > 0
+
+
+def test_scheduler_message_log_types():
+    from repro.core.messages import MsgType
+    s = ClusterScheduler(0, 2, 2, dn_th=1)
+    r = Request(sort_key=0.0, rid=1)
+    s.place_local(r)
+    s.maybe_beacon()
+    kinds = {m.type for m in s.tx_log}
+    assert MsgType.TASK_START in kinds
+    assert MsgType.STATUS_BEACON in kinds

@@ -1,0 +1,105 @@
+"""Sharding rules: every sharded dim divides its mesh axes, for all 10
+architectures on both production meshes — no compilation needed.
+
+Runs in a subprocess with 512 placeholder devices (XLA_FLAGS must be set
+before jax initializes, which pytest's process already did with 1 device),
+so here we validate divisibility arithmetically against mesh SHAPES.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.steps import abstract_params, abstract_cache, input_specs
+from repro.configs.base import SHAPES, shape_supported
+from repro.parallel import sharding as SH
+
+
+class FakeMesh:
+    """Mesh stand-in exposing .shape/.axis_names (no devices needed)."""
+
+    def __init__(self, multi_pod):
+        self.axis_names = (("pod", "data", "model") if multi_pod
+                           else ("data", "model"))
+        self.shape = dict(zip(self.axis_names,
+                              (2, 16, 16) if multi_pod else (16, 16)))
+
+
+def _axis_prod(mesh, entry):
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        p = 1
+        for e in entry:
+            p *= mesh.shape[e]
+        return p
+    return mesh.shape[entry]
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_spec_divisibility(arch, multi_pod):
+    cfg = get_config(arch)
+    mesh = FakeMesh(multi_pod)
+    params = abstract_params(cfg, jnp.bfloat16)
+    flat, _ = SH._tree_paths(params)
+    dp_ax = ("pod", "data") if multi_pod else ("data",)
+    dp = 1
+    for a in dp_ax:
+        dp *= mesh.shape[a]
+    for path, leaf in flat:
+        spec = SH.param_spec(cfg, mesh, path, leaf.shape)
+        spec = SH._add_fsdp(spec, leaf.shape, dp_ax, dp)
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for dim, entry in zip(leaf.shape, entries):
+            assert dim % _axis_prod(mesh, entry) == 0, \
+                (arch, path, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_spec_divisibility(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not shape_supported(cfg, shape):
+        pytest.skip("unsupported long-context arch")
+    mesh = FakeMesh(False)
+    cache = abstract_cache(cfg, shape, jnp.bfloat16)
+    flat, _ = SH._tree_paths(cache)
+    for path, leaf in flat:
+        spec = SH.cache_spec(cfg, mesh, path, leaf.shape,
+                             batch=shape.global_batch)
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for dim, entry in zip(leaf.shape, entries):
+            assert dim % _axis_prod(mesh, entry) == 0, \
+                (arch, path, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_complete(arch):
+    cfg = get_config(arch)
+    for shape in SHAPES.values():
+        if not shape_supported(cfg, shape):
+            continue
+        spec = input_specs(cfg, shape)
+        if shape.kind in ("train", "prefill"):
+            assert "tokens" in spec
+            if cfg.frontend == "vision":
+                assert "patches" in spec
+                assert (spec["tokens"].shape[1] + cfg.vision_tokens
+                        == shape.seq_len)
+            if cfg.family == "encdec":
+                assert "frames" in spec
+        else:
+            assert spec["token"].shape == (shape.global_batch, 1)
+
+
+def test_fsdp_picks_large_free_dim():
+    from jax.sharding import PartitionSpec as P
+    spec = SH._add_fsdp(P(None, "model"), (8192, 1024), ("data",), 16)
+    assert spec == P("data", "model")
+    # too small / non-divisible dims stay unsharded
+    spec = SH._add_fsdp(P(None,), (100,), ("data",), 16)
+    assert spec == P(None,)

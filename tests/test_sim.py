@@ -1,0 +1,87 @@
+"""Transaction-level simulator: conservation, determinism, paper shape."""
+import numpy as np
+import pytest
+
+from repro.core import workloads as W
+from repro.core.sim import SimParams, run, speedup
+
+
+def _small(k=4, n_childs=16, **kw):
+    return SimParams(m=16, k=k, n_childs=n_childs, max_apps=32,
+                     queue_cap=512, **kw)
+
+
+def test_single_app_completes():
+    p = _small()
+    arr, gmns, lens = W.independent_tasks(p, n_apps=1)
+    st = run(p, arr, gmns, lens, sim_len=1e7)
+    assert int(st["app_remaining"][0]) == 0
+    assert float(st["app_done"][0]) < 1e17
+    assert int(st["dropped"]) == 0
+    # all loads drained
+    assert int(np.asarray(st["loads"]).sum()) == 0
+
+
+def test_deterministic():
+    p = _small()
+    arr, gmns, lens = W.independent_tasks(p, n_apps=2)
+    a = run(p, arr, gmns, lens, 1e7)
+    b = run(p, arr, gmns, lens, 1e7)
+    assert float(a["app_done"][0]) == float(b["app_done"][0])
+    assert int(a["beacons_tx"]) == int(b["beacons_tx"])
+
+
+def test_speedup_at_least_serial():
+    """Parallel response never slower than running childs back-to-back on
+    one PE (sanity lower bound) and never faster than m-way ideal."""
+    p = _small(k=4)
+    arr, gmns, lens = W.independent_tasks(p, n_apps=1)
+    st = run(p, arr, gmns, lens, 1e7)
+    s, n = speedup(st, arr, lens)
+    assert n == 1
+    assert 1.0 < s <= p.m
+
+
+def test_k1_has_no_beacons():
+    p = _small(k=1)
+    arr, gmns, lens = W.independent_tasks(p, n_apps=1)
+    st = run(p, arr, gmns, lens, 1e7)
+    assert int(st["beacons_tx"]) == 0
+
+
+def test_beacons_decrease_with_threshold():
+    counts = []
+    for th in (1, 4, 16):
+        p = SimParams(m=64, k=8, n_childs=32, dn_th=th, max_apps=64,
+                      queue_cap=1024)
+        arr, gmns, lens = W.interference(p, sim_len=3e5, seed=0)
+        st = run(p, arr, gmns, lens, 3e5)
+        counts.append(int(st["beacons_tx"]))
+    assert counts[0] >= counts[1] >= counts[2]
+
+
+def test_clustered_beats_centralized_under_load():
+    """The paper's core claim at small scale: k>1 beats k=1 when the
+    centralized manager saturates."""
+    res = {}
+    for k in (1, 4):
+        p = SimParams(m=64, k=k, n_childs=48, dn_th=2, max_apps=128,
+                      queue_cap=2048, c_s=16.0)
+        arr, gmns, lens = W.interference(p, sim_len=6e5, pair_period=4000,
+                                         seed=0)
+        st = run(p, arr, gmns, lens, 6e5)
+        s, n = speedup(st, arr, lens)
+        assert n > 3
+        res[k] = s
+    assert res[4] > res[1]
+
+
+def test_mapping_balances_single_cluster():
+    """Within one cluster, min-search spreads childs evenly over PEs."""
+    p = SimParams(m=8, k=1, n_childs=8, max_apps=4, queue_cap=256)
+    arr, gmns, lens = W.independent_tasks(p, n_apps=1)
+    st = run(p, arr, gmns, lens, 2e4)   # stop mid-flight
+    # snapshot semantics differ; just assert it completed evenly: response
+    # equals one task length + overhead (no PE got two tasks)
+    tr = float(st["app_done"][0] - st["app_arrive"][0])
+    assert tr < 2 * 16_000

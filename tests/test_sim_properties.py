@@ -1,0 +1,65 @@
+"""Hypothesis property tests on the TLM simulator's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import workloads as W
+from repro.core.sim import SimParams, run
+
+
+@st.composite
+def sim_config(draw):
+    k = draw(st.sampled_from([1, 2, 4, 8]))
+    mpk = draw(st.sampled_from([1, 2, 4]))
+    n_childs = draw(st.integers(1, 12))
+    dn_th = draw(st.sampled_from([1, 2, 4, 8]))
+    n_apps = draw(st.integers(1, 3))
+    return SimParams(m=k * mpk, k=k, n_childs=n_childs, dn_th=dn_th,
+                     max_apps=8, queue_cap=512), n_apps
+
+
+@given(sim_config())
+@settings(max_examples=15, deadline=None)
+def test_all_apps_complete_and_loads_drain(cfg):
+    p, n_apps = cfg
+    arr, gmns, lens = W.independent_tasks(p, n_apps=n_apps)
+    st_ = run(p, arr, gmns, lens, sim_len=1e9)
+    done = np.asarray(st_["app_done"])[:n_apps]
+    assert (done < 1e17).all(), "every submitted app must finish"
+    assert int(np.asarray(st_["loads"]).sum()) == 0
+    assert int(st_["dropped"]) == 0
+    # response time at least one task length, at most serial execution
+    arr_np = np.asarray(st_["app_arrive"])[:n_apps]
+    tr = done - arr_np
+    lens_np = np.asarray(lens)[:n_apps]
+    assert (tr >= lens_np.max(axis=1) - 1e-3).all()
+    # generous upper bound: all childs serial on one PE + per-event overhead
+    bound = lens_np.sum(axis=1) * n_apps + 1e5
+    assert (tr <= bound).all()
+
+
+@given(sim_config())
+@settings(max_examples=10, deadline=None)
+def test_beacons_bounded_by_load_changes(cfg):
+    p, n_apps = cfg
+    arr, gmns, lens = W.independent_tasks(p, n_apps=n_apps)
+    st_ = run(p, arr, gmns, lens, sim_len=1e9)
+    # every mapped task changes a load twice (map + exit); each beacon needs
+    # >= dn_th accumulated change at one GMN
+    total_changes = 2 * n_apps * p.n_childs
+    assert int(st_["beacons_tx"]) <= total_changes // p.dn_th + p.k
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_interference_workload_stable(seed):
+    p = SimParams(m=16, k=4, n_childs=8, max_apps=64, queue_cap=1024)
+    arr, gmns, lens = W.interference(p, sim_len=2e5, seed=seed)
+    finite = arr[arr < 1e17]
+    assert len(finite) >= 2 and len(finite) % 2 == 0
+    pairs = finite.reshape(-1, 2)
+    # within each pair the second app arrives after the first (Poisson
+    # offset >= 0); pairs themselves may interleave when the offset
+    # exceeds the pair period — that's the intended contention
+    assert (pairs[:, 1] >= pairs[:, 0]).all()
+    assert (np.diff(pairs[:, 0]) > 0).all()      # pair launches are periodic
+    assert W.offered_load(p, 14_000.0) < 1.2
