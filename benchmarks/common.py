@@ -1,4 +1,16 @@
-"""Shared helpers for the paper-reproduction benchmarks."""
+"""Shared helpers for the paper-reproduction benchmarks.
+
+Output contract (consumed by the BENCH_*.json trajectory tracking — see
+benchmarks/README.md for the full schema): each benchmark module's
+``run()`` writes ``results/<name>.json`` via :func:`save` and prints one
+``name,us_per_call,derived`` CSV row via :func:`csv_row`.  The JSON
+payload is a flat dict whose keys are stable across PRs: measured data
+under ``curves``/``rows``, paper reference values under ``paper_claim``,
+and one boolean per headline claim prefixed ``claim_`` (plus
+free-standing booleans like ``ordering_clustered_best``).  Trajectory
+tooling snapshots ``results/<name>.json`` into ``BENCH_<name>.json`` per
+PR and diffs numeric leaves, so renaming or re-nesting keys breaks the
+time series — add new keys instead of mutating existing ones."""
 from __future__ import annotations
 
 import json

@@ -1,11 +1,17 @@
 """Fig 3a: application-interference speedup vs beacon threshold dn_th,
-for several cluster counts k (m=256, n=100 per app, Poisson lambda=7999)."""
+for several cluster counts k (m=256, n=100 per app, Poisson lambda=7999).
+
+Runs on the batched sweep engine (repro.core.sweep): per cluster count k,
+the full (dn_th x seed) grid is one vmapped run — one compilation per
+(m, k) shape."""
 from __future__ import annotations
 
+import jax
 import numpy as np
 
+from repro.core import sweep as SW
 from repro.core import workloads as W
-from repro.core.sim import SimParams, run as sim_run, speedup
+from repro.core.sim import SimParams
 
 from benchmarks.common import csv_row, save, timed
 
@@ -17,20 +23,19 @@ def run(verbose: bool = True, ks=KS, thresholds=THRESHOLDS,
         sim_len: float = 4e6, seeds=(1, 2)) -> dict:
     curves = {}
     t_total = 0.0
+    compiles0 = SW.cache_size()
+    knobs = SW.knob_batch(dn_th=thresholds)
     for k in ks:
-        row = []
-        for th in thresholds:
-            vals = []
-            for seed in seeds:
-                p = SimParams(m=256, k=k, n_childs=100, dn_th=th,
-                              max_apps=512, queue_cap=2048)
-                arr, gmns, lens = W.interference(p, sim_len=sim_len, seed=seed)
-                st, dt = timed(sim_run, p, arr, gmns, lens, sim_len)
-                t_total += dt
-                s, _ = speedup(st, arr, lens)
-                vals.append(s)
-            row.append(float(np.mean(vals)))
-        curves[str(k)] = {"dn_th": list(thresholds), "speedup": row}
+        p = SimParams(m=256, k=k, n_childs=100, max_apps=512,
+                      queue_cap=2048)
+        wl = W.interference_batch(p, seeds=seeds, sim_len=sim_len)
+        st, dt = timed(lambda: jax.block_until_ready(
+            SW.sweep(p.shape, knobs, wl, sim_len)))
+        t_total += dt
+        row = SW.speedup(st, wl[2]).mean(axis=1)     # (B,) mean over seeds
+        curves[str(k)] = {"dn_th": list(thresholds),
+                          "speedup": [float(v) for v in row]}
+    n_compiles = SW.cache_size() - compiles0
 
     s1 = np.mean(curves["1"]["speedup"]) if "1" in curves else None
     s16_th4 = (curves["16"]["speedup"][list(thresholds).index(4)]
@@ -53,12 +58,16 @@ def run(verbose: bool = True, ks=KS, thresholds=THRESHOLDS,
         "claim_k16_band": improvement_16 is not None
                           and 2.0 <= improvement_16 <= 3.6,
         "claim_robust": robust,
+        "n_compiles": n_compiles,
+        "compile_once_per_shape": n_compiles <= len(ks),
     }
     save("fig3a", payload)
     if verbose:
+        i16 = f"{improvement_16:.2f}" if improvement_16 else "n/a"
+        i256 = f"{improvement_256:.2f}" if improvement_256 else "n/a"
         csv_row("fig3a_interference", t_total * 1e6,
-                f"k16/k1={improvement_16:.2f}|k256/k1={improvement_256:.2f}"
-                f"|robust={robust}")
+                f"k16/k1={i16}|k256/k1={i256}"
+                f"|robust={robust}|compiles={n_compiles}")
     return payload
 
 

@@ -11,7 +11,7 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import fig2a, fig2b, fig3a, fig3b, table5
+    from benchmarks import baseline_compare, fig2a, fig2b, fig3a, fig3b, table5
     from benchmarks import moe_balance, scheduler_overhead
 
     print("name,us_per_call,derived")
@@ -23,8 +23,11 @@ def main() -> None:
     ok &= a["claim_k16_band"]
     bb = fig3b.run()
     ok &= bb["claim_monotone"]
+    ok &= bb["compile_once_per_shape"]
     t = table5.run()
     ok &= t["ordering_clustered_best"]
+    c = baseline_compare.run()
+    ok &= c["claim_clustered_best"]
     scheduler_overhead.run()
     moe_balance.run()
     print(f"# paper-claim checks {'PASS' if ok else 'FAIL'}")

@@ -2,8 +2,9 @@
 cost of the two-stage mapper in this framework's scheduler, vs a flat
 argmin over all m units, across cluster counts k.
 
-Also reports decisions/second for the batched kernel path (the serving
-engine's hot loop)."""
+Also reports the TLM sweep engine's throughput (events/s across a batch
+of knob configs in one compiled program) — the batched path every
+design-space benchmark (fig3a/fig3b/table5/baseline_compare) rides on."""
 from __future__ import annotations
 
 import time
@@ -12,6 +13,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import sweep as SW
+from repro.core import workloads as W
+from repro.core.sim import SimParams
 from repro.kernels import ops
 
 from benchmarks.common import csv_row, save
@@ -24,6 +28,29 @@ def _bench(fn, *args, iters=20):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.time() - t0) / iters
+
+
+def _bench_sweep(thresholds=(1, 2, 4, 8), iters=3):
+    """Events/second of the sweep engine (both execution strategies) on a
+    small interference run."""
+    p = SimParams(m=64, k=8, n_childs=32, max_apps=64, queue_cap=1024)
+    wl = W.interference_batch(p, seeds=(0,), sim_len=3e5)
+    knobs = SW.knob_batch(dn_th=thresholds)
+    out = {"configs": len(thresholds)}
+    for mode in ("seq", "vmap"):
+        st = jax.block_until_ready(
+            SW.sweep(p.shape, knobs, wl, 3e5, mode=mode))    # compile
+        t0 = time.time()
+        for _ in range(iters):
+            st = jax.block_until_ready(
+                SW.sweep(p.shape, knobs, wl, 3e5, mode=mode))
+        dt = (time.time() - t0) / iters
+        events = int(np.asarray(st["events_processed"]).sum())
+        out[mode] = {"events_per_batch": events,
+                     "sweep_s": dt,
+                     "events_per_sec": events / dt,
+                     "us_per_event": dt / events * 1e6}
+    return out
 
 
 def run(verbose: bool = True, m: int = 256, n_tasks: int = 100) -> dict:
@@ -45,9 +72,11 @@ def run(verbose: bool = True, m: int = 256, n_tasks: int = 100) -> dict:
         t = _bench(lambda l=loads: ops.assign_tasks(l, costs))
         rows[str(k)] = {"us_per_batch": t * 1e6,
                         "us_per_decision": t * 1e6 / n_tasks}
+    sweep_engine = _bench_sweep()
     payload = {
         "two_stage": rows,
         "flat_argmin_us_per_batch": t_flat * 1e6,
+        "sweep_engine": sweep_engine,
         "note": "paper Table 4 is 65nm silicon area (out of scope); this is "
                 "the software scheduler's decision latency on this host",
     }
@@ -55,7 +84,9 @@ def run(verbose: bool = True, m: int = 256, n_tasks: int = 100) -> dict:
     if verbose:
         csv_row("scheduler_overhead",
                 rows["16"]["us_per_batch"],
-                f"us_per_decision_k16={rows['16']['us_per_decision']:.2f}")
+                f"us_per_decision_k16={rows['16']['us_per_decision']:.2f}"
+                f"|sweep_ev_per_s="
+                f"{sweep_engine['seq']['events_per_sec']:.0f}")
     return payload
 
 

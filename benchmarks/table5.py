@@ -4,13 +4,17 @@
   k=8   this work                    paper: 73.5
   k=16  this work                    paper: 78.7
   k=256 fully distributed (Isonet)   paper: 44.3
-"""
+
+Runs on the batched sweep engine: per k, all seeds execute in one vmapped
+run (single compilation per (m, k) shape)."""
 from __future__ import annotations
 
+import jax
 import numpy as np
 
+from repro.core import sweep as SW
 from repro.core import workloads as W
-from repro.core.sim import SimParams, run as sim_run, speedup
+from repro.core.sim import SimParams
 
 from benchmarks.common import csv_row, save, timed
 
@@ -20,16 +24,15 @@ PAPER = {1: 28.1, 8: 73.5, 16: 78.7, 256: 44.3}
 def run(verbose: bool = True, sim_len: float = 4e6, seeds=(1, 2, 3)) -> dict:
     rows = {}
     t_total = 0.0
+    knobs = SW.knob_batch(dn_th=4)
     for k in PAPER:
-        vals = []
-        for seed in seeds:
-            p = SimParams(m=256, k=k, n_childs=100, dn_th=4,
-                          max_apps=512, queue_cap=2048)
-            arr, gmns, lens = W.interference(p, sim_len=sim_len, seed=seed)
-            st, dt = timed(sim_run, p, arr, gmns, lens, sim_len)
-            t_total += dt
-            s, n = speedup(st, arr, lens)
-            vals.append(s)
+        p = SimParams(m=256, k=k, n_childs=100, max_apps=512,
+                      queue_cap=2048)
+        wl = W.interference_batch(p, seeds=seeds, sim_len=sim_len)
+        st, dt = timed(lambda: jax.block_until_ready(
+            SW.sweep(p.shape, knobs, wl, sim_len)))
+        t_total += dt
+        vals = SW.speedup(st, wl[2])[0]               # (S,) over seeds
         rows[str(k)] = {"speedup": float(np.mean(vals)),
                         "std": float(np.std(vals)),
                         "paper": PAPER[k]}

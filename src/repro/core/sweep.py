@@ -1,0 +1,183 @@
+"""Batched design-space sweeps over the TLM simulator (paper Sec 5).
+
+The paper's evaluation is a design-space exploration: sweep the beacon
+threshold ``dn_th`` and the cost coefficients across cluster counts and
+workload seeds (Figs 2-3, Table 5).  ``sim.run`` compiles once per
+``SimShape`` (m, k, n_childs, queue_cap, max_apps); this module goes one
+step further and runs a whole grid of knob configs x workload seeds in a
+single compiled program:
+
+    p = SimParams(m=256, k=16)
+    knobs = knob_batch(dn_th=(1, 2, 4, 8, 16, 32))        # B = 6 configs
+    wl = W.interference_batch(p, seeds=(1, 2), sim_len=4e6)  # S = 2 seeds
+    st = sweep(p.shape, knobs, wl, sim_len=4e6)
+    beacons(st)          # (6, 2) int array
+
+Every leaf of the returned state dict carries leading axes ``(B, S)``:
+axis 0 indexes the knob config, axis 1 the workload.  Results are bitwise
+identical to per-config ``sim.run`` calls (tests/test_sweep.py): ``vmap``
+batches the very same traced computation, it does not approximate it.
+
+Two execution strategies sit behind one API (see ``sweep``'s ``mode``):
+"vmap" runs the grid as one batched XLA program (the accelerator path —
+the inner ``lax.while_loop`` batches as run-until-all-lanes-done with
+masked updates), "seq" replays the single-config program warm (the CPU
+path — zero recompiles across the grid).  Either way the design-space
+grid costs one compilation per (m, k) shape instead of one per point.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sim import (SimKnobs, SimParams, SimShape, _run,
+                            compile_cache_size, simulate)
+
+__all__ = ["knob_batch", "knob_product", "sweep", "cache_size",
+           "response_times", "speedup", "mean_response", "beacons"]
+
+
+def _as_shape(p) -> SimShape:
+    return p.shape if isinstance(p, SimParams) else p
+
+
+def knob_batch(*, c_b=8.0, c_s=8.0, c_join=8.0, dn_th=4) -> SimKnobs:
+    """Build a batch of B knob configs.  Each argument is a scalar
+    (broadcast) or a length-B sequence; sequences must agree on B."""
+    vals = {"c_b": c_b, "c_s": c_s, "c_join": c_join, "dn_th": dn_th}
+    sizes = {name: len(v) for name, v in vals.items()
+             if np.ndim(v) == 1}
+    if len(set(sizes.values())) > 1:
+        raise ValueError(f"knob sequences disagree on batch size: {sizes}")
+    b = next(iter(sizes.values()), 1)
+    def col(v, dtype):
+        a = np.asarray(v, dtype)
+        return jnp.asarray(np.broadcast_to(a, (b,)))
+    return SimKnobs(c_b=col(vals["c_b"], np.float32),
+                    c_s=col(vals["c_s"], np.float32),
+                    c_join=col(vals["c_join"], np.float32),
+                    dn_th=col(vals["dn_th"], np.int32))
+
+
+def knob_product(*, c_b=(8.0,), c_s=(8.0,), c_join=(8.0,),
+                 dn_th=(4,)) -> SimKnobs:
+    """Cartesian product of knob axes, flattened to one batch axis in
+    ``itertools.product`` order (c_b outermost, dn_th innermost)."""
+    rows = list(itertools.product(np.atleast_1d(c_b), np.atleast_1d(c_s),
+                                  np.atleast_1d(c_join), np.atleast_1d(dn_th)))
+    cb, cs, cj, th = (np.asarray(col) for col in zip(*rows))
+    return SimKnobs(c_b=jnp.asarray(cb, jnp.float32),
+                    c_s=jnp.asarray(cs, jnp.float32),
+                    c_join=jnp.asarray(cj, jnp.float32),
+                    dn_th=jnp.asarray(th, jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _sweep(shape, knobs, arrivals, gmns, lengths, sim_len):
+    def per_workload(a, g, l):
+        return jax.vmap(
+            lambda kn: simulate(shape, kn, a, g, l, sim_len))(knobs)
+    # out_axes=1: knob-config axis stays leading, workload axis second
+    return jax.vmap(per_workload, in_axes=0, out_axes=1)(
+        arrivals, gmns, lengths)
+
+
+def sweep(shape, knobs: SimKnobs, workload, sim_len: float = 1e7,
+          mode: str = "auto"):
+    """Run B knob configs x S workloads with one compilation per shape.
+
+    shape     SimShape (or SimParams, whose .shape is taken).
+    knobs     SimKnobs with leading axis (B,) — see knob_batch/knob_product.
+    workload  (arrivals (S, A), arrival_gmns (S, A), lengths (S, A, n))
+              as produced by workloads.interference_batch / *_grid.
+    mode      execution strategy; results are bitwise identical across
+              modes (tests/test_sweep.py):
+              - "vmap": the whole grid is ONE batched XLA program (one
+                compile per (shape, B, S)).  Wins on accelerators where
+                lanes vectorize; on CPU the batched while-loop pays for
+                every event handler in every lane each step.
+              - "seq": warm re-runs of the single-config program (one
+                compile per shape, zero recompiles across the grid) —
+                the fast path on CPU.
+              - "auto" (default): "seq" on CPU, "vmap" elsewhere.
+
+    Returns the final-state dict with every leaf batched to (B, S, ...).
+    """
+    shape = _as_shape(shape)
+    arrivals, gmns, lengths = workload
+    arrivals = jnp.asarray(arrivals, jnp.float32)
+    gmns = jnp.asarray(gmns, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.float32)
+    if arrivals.ndim != 2 or lengths.ndim != 3:
+        raise ValueError("workload arrays need a leading seed axis (S,); "
+                         "use workloads.interference_batch")
+    if knobs.dn_th.ndim != 1:
+        raise ValueError("knobs need a leading batch axis (B,); "
+                         "use knob_batch/knob_product")
+    if mode == "auto":
+        mode = "seq" if jax.default_backend() == "cpu" else "vmap"
+    if mode == "vmap":
+        return _sweep(shape, knobs, arrivals, gmns, lengths,
+                      jnp.float32(sim_len))
+    if mode != "seq":
+        raise ValueError(f"unknown sweep mode: {mode!r}")
+    b, s = knobs.dn_th.shape[0], arrivals.shape[0]
+    sl = jnp.float32(sim_len)
+    outs = [_run(shape, SimKnobs(*(leaf[i] for leaf in knobs)),
+                 arrivals[j], gmns[j], lengths[j], sl)
+            for i in range(b) for j in range(s)]
+    return jax.tree.map(
+        lambda *leaves: jnp.stack(leaves).reshape((b, s) + leaves[0].shape),
+        *outs)
+
+
+def cache_size() -> int:
+    """Total XLA programs compiled for sweeping: one per (SimShape, B, S)
+    in vmap mode plus one per SimShape in seq mode.  Returns only the seq
+    count if a future JAX drops jit's private cache introspection."""
+    counter = getattr(_sweep, "_cache_size", None)
+    vmap_count = counter() if callable(counter) else 0
+    return vmap_count + compile_cache_size()
+
+
+# --------------------------------------------------------------------------
+# Batched metrics (numpy, host-side; operate on sweep() output)
+# --------------------------------------------------------------------------
+
+def response_times(state):
+    """Masked response times: returns (tr (B, S, A), ok (B, S, A))."""
+    done = np.asarray(state["app_done"])
+    arr = np.asarray(state["app_arrive"])
+    ok = (done < 1e17) & (arr < 1e17)
+    return np.where(ok, done - arr, np.nan), ok
+
+
+def _masked_mean(x):
+    """nanmean without the all-NaN RuntimeWarning (empty lane -> nan)."""
+    cnt = np.sum(~np.isnan(x), axis=-1)
+    tot = np.nansum(x, axis=-1)
+    return np.where(cnt > 0, tot / np.maximum(cnt, 1), np.nan)
+
+
+def speedup(state, lengths):
+    """Mean per-app speedup t_seq / t_par over completed apps: (B, S)."""
+    tr, ok = response_times(state)
+    seq = np.asarray(lengths).sum(axis=-1)          # (S, A)
+    with np.errstate(invalid="ignore", divide="ignore"):
+        s = np.where(ok, seq[None] / tr, np.nan)
+    return _masked_mean(s)
+
+
+def mean_response(state):
+    """Mean response time over completed apps: (B, S)."""
+    tr, _ = response_times(state)
+    return _masked_mean(tr)
+
+
+def beacons(state):
+    """Transmitted status beacons: (B, S) int64."""
+    return np.asarray(state["beacons_tx"]).astype(np.int64)

@@ -66,6 +66,40 @@ def interference(p: SimParams, *, sim_len: float = 2e6, lam: float = 7_999.0,
     return arrivals, gmns, lengths
 
 
+def _stack(workloads):
+    arrs, gmns, lens = zip(*workloads)
+    return (np.stack(arrs), np.stack(gmns), np.stack(lens))
+
+
+def interference_batch(p: SimParams, *, seeds=(0,), sim_len: float = 2e6,
+                       lam: float = 7_999.0, pair_period: float | None = None,
+                       active_frac: float = 0.9):
+    """Stack of interference workloads over seeds, shaped for
+    ``repro.core.sweep``: arrivals (S, A), gmns (S, A), lengths (S, A, n)."""
+    return _stack([interference(p, sim_len=sim_len, lam=lam,
+                                pair_period=pair_period, seed=s,
+                                active_frac=active_frac)
+                   for s in seeds])
+
+
+def interference_grid(p: SimParams, *, pair_periods, seeds=(0,),
+                      sim_len: float = 2e6, lam: float = 7_999.0,
+                      active_frac: float = 0.9):
+    """Interference workloads over a (pair_period x seed) grid, flattened
+    row-major (pair_period outermost) into the seed axis S for a single
+    ``sweep`` call; reshape results to (len(pair_periods), len(seeds))."""
+    return _stack([interference(p, sim_len=sim_len, lam=lam, pair_period=pp,
+                                seed=s, active_frac=active_frac)
+                   for pp in pair_periods for s in seeds])
+
+
+def independent_batch(p: SimParams, *, seeds=(0,), n_apps: int = 1,
+                      length=MAX_LEN):
+    """Stack of independent-task workloads over seeds (sweep-shaped)."""
+    return _stack([independent_tasks(p, n_apps=n_apps, length=length, seed=s)
+                   for s in seeds])
+
+
 def offered_load(p: SimParams, pair_period: float, mean_len=0.975 * MAX_LEN):
     """Utilization sanity check: must stay < 1 for a stable system."""
     work_per_period = 2 * p.n_childs * mean_len

@@ -1,0 +1,106 @@
+"""Deterministic micro-fallback for the ``hypothesis`` package.
+
+Installed into ``sys.modules`` by conftest.py only when real hypothesis is
+unavailable (the pinned CI environment installs the real package; see
+pyproject.toml).  Implements just the API subset this test-suite uses —
+``given``/``settings`` and the ``integers``/``floats``/``booleans``/
+``lists``/``tuples``/``sampled_from``/``composite`` strategies — drawing
+examples from a PRNG seeded from the test name, so runs are reproducible.
+No shrinking, no example database: a much weaker searcher than real
+hypothesis, but it keeps the property tests executable everywhere.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def draw(self, rng):
+        return self._sample(rng)
+
+
+def integers(min_value=0, max_value=None):
+    hi = (2 ** 31 - 1) if max_value is None else max_value
+    return _Strategy(lambda rng: int(rng.integers(min_value, hi + 1)))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(elements):
+    seq = list(elements)
+    return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+def lists(elements, min_size=0, max_size=10, **_kw):
+    def sample(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(n)]
+    return _Strategy(sample)
+
+
+def tuples(*strategies):
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+def composite(fn):
+    @functools.wraps(fn)
+    def builder(*args, **kw):
+        return _Strategy(lambda rng: fn(lambda s: s.draw(rng), *args, **kw))
+    return builder
+
+
+def settings(max_examples=DEFAULT_EXAMPLES, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(fn, "_stub_max_examples", DEFAULT_EXAMPLES)
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for _ in range(n):
+                extra = [s.draw(rng) for s in arg_strategies]
+                kws = {name: s.draw(rng)
+                       for name, s in kw_strategies.items()}
+                fn(*args, *extra, **kwargs, **kws)
+
+        # hide the strategy-filled parameters from pytest's fixture
+        # resolution: positional strategies fill from the right, keyword
+        # strategies by name — whatever remains (e.g. fixtures) stays
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        if arg_strategies:
+            params = params[: len(params) - len(arg_strategies)]
+        params = [q for q in params if q.name not in kw_strategies]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+for _name, _obj in [("integers", integers), ("floats", floats),
+                    ("booleans", booleans), ("sampled_from", sampled_from),
+                    ("lists", lists), ("tuples", tuples),
+                    ("composite", composite)]:
+    setattr(strategies, _name, _obj)

@@ -1,6 +1,21 @@
 """Test fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches see the
 host's single device; only launch/dryrun.py forces 512 placeholder devices.
+
+When the real ``hypothesis`` package is missing (it is not baked into the
+runtime image), install the deterministic fallback from _hypothesis_stub so
+the property tests still collect and run; CI installs real hypothesis (see
+pyproject.toml / .github/workflows/ci.yml) and takes priority here.
 """
+import sys
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
+
 import jax
 import pytest
 

@@ -1,0 +1,99 @@
+"""Batched sweep engine: exactness vs per-config runs, compile caching,
+and the beacon-threshold monotonicity property (paper Fig 3b)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sweep as SW
+from repro.core import workloads as W
+from repro.core.sim import SimParams, run
+
+
+def _params(k=4, **kw):
+    kw.setdefault("m", 16)
+    kw.setdefault("n_childs", 16)
+    kw.setdefault("max_apps", 32)
+    kw.setdefault("queue_cap", 512)
+    return SimParams(k=k, **kw)
+
+
+THRESHOLDS = (1, 2, 4, 8)
+
+
+@pytest.mark.parametrize("mode", ["vmap", "seq"])
+def test_sweep_matches_per_config_bitwise(mode):
+    """A batched threshold sweep must be bitwise identical to per-config
+    run() calls in BOTH execution modes — vmap batches the same
+    computation, it doesn't change it."""
+    p = _params()
+    wl = W.interference_batch(p, seeds=(0, 1), sim_len=3e5)
+    stb = SW.sweep(p.shape, SW.knob_batch(dn_th=THRESHOLDS), wl, 3e5,
+                   mode=mode)
+    for i, th in enumerate(THRESHOLDS):
+        for s in range(2):
+            pi = _params(dn_th=th)
+            sti = run(pi, wl[0][s], wl[1][s], wl[2][s], 3e5)
+            assert np.array_equal(np.asarray(stb["beacons_tx"])[i, s],
+                                  np.asarray(sti["beacons_tx"]))
+            assert np.array_equal(np.asarray(stb["app_done"])[i, s],
+                                  np.asarray(sti["app_done"]))
+            assert np.array_equal(np.asarray(stb["app_arrive"])[i, s],
+                                  np.asarray(sti["app_arrive"]))
+
+
+def test_cost_knob_sweep_matches_per_config():
+    """Sweeping the traced cost knobs (c_s, c_b) also reproduces the
+    per-config results exactly."""
+    p = _params()
+    wl = W.independent_batch(p, seeds=(0,), n_apps=2)
+    knobs = SW.knob_batch(c_s=(1.0, 8.0, 64.0), c_b=(2.0, 8.0, 32.0))
+    stb = SW.sweep(p.shape, knobs, wl, 1e7)
+    for i, (cs, cb) in enumerate(zip((1.0, 8.0, 64.0), (2.0, 8.0, 32.0))):
+        sti = run(_params(c_s=cs, c_b=cb), wl[0][0], wl[1][0], wl[2][0], 1e7)
+        assert np.array_equal(np.asarray(stb["app_done"])[i, 0],
+                              np.asarray(sti["app_done"]))
+
+
+def test_run_does_not_recompile_on_knob_change():
+    """dn_th / c_* are traced: changing them re-uses the XLA program."""
+    from repro.core.sim import compile_cache_size
+    p = _params(m=8, k=2, n_childs=4, max_apps=8, queue_cap=128)
+    arr, gmns, lens = W.independent_tasks(p, n_apps=1)
+    run(p, arr, gmns, lens, 1e7)
+    c0 = compile_cache_size()
+    for th, cs in ((1, 2.0), (7, 16.0), (3, 1.0)):
+        run(_params(m=8, k=2, n_childs=4, max_apps=8, queue_cap=128,
+                    dn_th=th, c_s=cs), arr, gmns, lens, 1e7)
+    assert compile_cache_size() == c0
+
+
+def test_sweep_compiles_once_per_shape():
+    p = _params(m=8, k=2, n_childs=4, max_apps=8, queue_cap=128)
+    wl = W.independent_batch(p, seeds=(0,), n_apps=1)
+    SW.sweep(p.shape, SW.knob_batch(dn_th=(1, 2)), wl, 1e7)
+    c0 = SW.cache_size()
+    SW.sweep(p.shape, SW.knob_batch(dn_th=(4, 16)), wl, 1e7)
+    SW.sweep(p.shape, SW.knob_batch(dn_th=(3, 5), c_s=2.0), wl, 1e7)
+    assert SW.cache_size() == c0
+
+
+def test_knob_batch_validation():
+    kn = SW.knob_batch(dn_th=(1, 2, 4))
+    assert kn.dn_th.shape == (3,) and kn.c_b.shape == (3,)
+    with pytest.raises(ValueError):
+        SW.knob_batch(dn_th=(1, 2), c_s=(1.0, 2.0, 3.0))
+    prod = SW.knob_product(c_s=(1.0, 8.0), dn_th=(1, 2, 4))
+    assert prod.dn_th.shape == (6,)
+    assert np.asarray(prod.c_s).tolist() == [1.0] * 3 + [8.0] * 3
+
+
+@given(st.sampled_from([2, 4, 8]), st.integers(0, 20))
+@settings(max_examples=8, deadline=None)
+def test_beacons_monotone_in_threshold(k, seed):
+    """Property (paper Fig 3b): beacons_tx is monotone non-increasing in
+    dn_th — a coarser threshold never produces more status traffic."""
+    p = _params(k=k, n_childs=12)
+    wl = W.interference_batch(p, seeds=(seed,), sim_len=2e5)
+    st_ = SW.sweep(p.shape, SW.knob_batch(dn_th=(1, 2, 4, 8, 16)), wl, 2e5)
+    b = SW.beacons(st_)[:, 0]
+    assert (np.diff(b) <= 0).all(), f"not monotone: {b.tolist()}"
