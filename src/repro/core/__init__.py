@@ -1,1 +1,2 @@
-"""Paper core: messages, analytic model, two-stage mapping, beacons, TLM sim."""
+"""Paper core: messages, analytic model, pluggable mapping/beacon
+policies, two-stage mapping, beacons, TLM sim, batched sweeps."""

@@ -1,8 +1,11 @@
 """Two-stage hierarchical task mapping (paper Sec 4.1) — framework-facing API.
 
-The TLM simulator inlines this logic for tick accounting; the serving engine
-and launcher consume it through this module.  `assign_tasks` dispatches to
-the Pallas kernel on TPU (kernels/hier_minsearch.py).
+The batch path (`map_one`/`map_batch`) routes through the
+`kernels/hier_minsearch` Pallas kernel — compiled on TPU, interpret mode
+elsewhere — via `kernels.ops.assign_tasks`; the host-side stage-1 choice
+(`stage1_pick`) delegates to the pluggable policy core
+(`core/policies.py`), which is the same logic the TLM simulator traces
+and the serving engine's schedulers call per request.
 """
 from __future__ import annotations
 
@@ -11,6 +14,7 @@ from dataclasses import dataclass
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import policies as P
 from repro.kernels import ops
 
 
@@ -42,12 +46,14 @@ def map_batch(state: MapperState, costs):
     return assigns, MapperState(loads=new_loads, view=new_loads.sum(axis=1))
 
 
-def stage1_pick(view, start: int = 0):
-    """Cluster choice by min-search over (stale) per-cluster summaries,
-    tie-broken starting at `start` (the searching node's own index)."""
-    k = view.shape[0]
-    perm = (np.arange(k) + start) % k
-    return int(perm[int(np.argmin(np.asarray(view)[perm]))])
+def stage1_pick(view, start: int = 0, *, policy: str = "min_search",
+                age=None, rr: int = 0, salt: int = 0,
+                T_b: float = float("inf")):
+    """Stage-1 cluster choice over (stale) per-cluster summaries via the
+    selected MappingPolicy (default: the paper's min-search, tie-broken
+    starting at `start`, the searching node's own index)."""
+    return P.host_pick(policy, np.asarray(view), age, start, rr, salt,
+                       T_b=T_b)
 
 
 def fork_tree_targets(n_tasks: int, k: int, m_per_k: int):

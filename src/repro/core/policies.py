@@ -1,0 +1,259 @@
+"""Pluggable mapping/beacon policy core (paper Sec 4, generalized).
+
+The paper evaluates exactly one management strategy: stage-1 cluster
+choice by min-search over (possibly stale) beacon views, and
+threshold-based status communication.  This module widens both decisions
+into first-class, *sweepable* design-space axes (ROADMAP north star;
+cf. Myrmics' hierarchical ownership scheduling, arXiv:1606.04282, and the
+decision-quality vs. manager-traffic trade of arXiv:2009.03066):
+
+  MappingPolicy  stage-1 cluster choice given a possibly-stale view
+                 ``min_search``          the paper's rule: min-search over the
+                                         view, ties broken starting at the
+                                         deciding GMN's own index
+                 ``round_robin``         ignore the view; cycle clusters
+                                         starting at the own index (one
+                                         persistent pointer per GMN)
+                 ``hashed_random``       stateless uint32 hash of
+                                         (app, decision-index, gmn) — the
+                                         "power of zero choices" baseline
+                 ``staleness_weighted``  min-search over view + age/T_b: a
+                                         cluster whose beacon is stale is
+                                         assumed to have drifted busier
+
+  BeaconPolicy   status-communication trigger for a GMN whose summarized
+                 load is ``last_bcast + delta``
+                 ``threshold``  fire when |delta| >= dn_th (paper Sec 4.2)
+                 ``periodic``   fire when t - last_tx >= T_b, regardless
+                                of drift
+                 ``hybrid``     threshold OR deadline: drift fires early,
+                                the T_b deadline bounds silent staleness
+
+Every policy exists in two bitwise-matching forms:
+
+- a **traced** JAX function (``mapping_policy(name)`` /
+  ``beacon_policy(name)``) used inside the TLM simulator's event handlers
+  — pure jnp, vmap-safe, no host syncs; and
+- a **host** numpy adapter (``host_pick`` / ``host_stage2`` /
+  ``host_beacon_due``) used by the wall-clock layers
+  (``serving.engine``, ``core.beacons``, ``core.mapping``), which must
+  decide per-request without entering a trace.
+
+The policy *name* is static — ``SimPolicy`` is a hashable frozen
+dataclass passed as a static JIT argument, so each (mapping, beacon)
+combination is one XLA program — while the numeric parameters
+(``dn_th``, ``T_b``) stay traced ``SimKnobs`` leaves and remain
+vmap-sweepable (DESIGN.md §9).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+MAPPING_POLICIES = ("min_search", "round_robin", "hashed_random",
+                    "staleness_weighted")
+BEACON_POLICIES = ("threshold", "periodic", "hybrid")
+
+
+@dataclass(frozen=True)
+class SimPolicy:
+    """Static policy selection: hashable, one XLA program per value."""
+    mapping: str = "min_search"
+    beacon: str = "threshold"
+
+    def __post_init__(self):
+        if self.mapping not in MAPPING_POLICIES:
+            raise ValueError(f"unknown mapping policy {self.mapping!r}; "
+                             f"choose from {MAPPING_POLICIES}")
+        if self.beacon not in BEACON_POLICIES:
+            raise ValueError(f"unknown beacon policy {self.beacon!r}; "
+                             f"choose from {BEACON_POLICIES}")
+
+
+DEFAULT_POLICY = SimPolicy()
+
+
+def policy_grid(mappings=MAPPING_POLICIES, beacons=BEACON_POLICIES):
+    """All (mapping x beacon) combinations as SimPolicy values,
+    row-major (mapping outermost)."""
+    return [SimPolicy(m, b) for m in mappings for b in beacons]
+
+
+# ==========================================================================
+# Traced mapping policies (used by repro.core.sim inside the event loop)
+#
+# Common signature:  fn(view, age, g, rr, app, i, *, k, T_b) -> cluster i32
+#   view (k,) i32   per-cluster load summaries, own entry exact
+#   age  (k,) f32   ticks since each summary was received (own entry 0)
+#   g        i32    the deciding GMN's index
+#   rr       i32    the GMN's persistent decision counter (round-robin ptr)
+#   app, i   i32    application id / decision index within this fork
+#   k        int    static cluster count;  T_b  traced f32 beacon period
+# ==========================================================================
+
+def _own_first(k, g):
+    """Search order starting at the deciding GMN's own index (models the
+    hardware min-search starting at the local node, DESIGN.md §6)."""
+    return jnp.mod(jnp.arange(k) + g, k)
+
+
+def _map_min_search(view, age, g, rr, app, i, *, k, T_b):
+    perm = _own_first(k, g)
+    return perm[jnp.argmin(view[perm])]
+
+
+def _map_round_robin(view, age, g, rr, app, i, *, k, T_b):
+    return jnp.mod(g + rr, k).astype(jnp.int32)
+
+
+def _map_hashed_random(view, age, g, rr, app, i, *, k, T_b):
+    h = _hash_u32(jnp.asarray(app), jnp.asarray(i), jnp.asarray(g))
+    return jnp.mod(h, jnp.uint32(k)).astype(jnp.int32)
+
+
+def _map_staleness_weighted(view, age, g, rr, app, i, *, k, T_b):
+    # A summary that is `age` ticks old is presumed one load-unit busier
+    # per elapsed beacon period: score = view + age / T_b.
+    score = view.astype(jnp.float32) \
+        + age / jnp.maximum(T_b, jnp.float32(1.0))
+    perm = _own_first(k, g)
+    return perm[jnp.argmin(score[perm])]
+
+
+_MAPPING = {
+    "min_search": _map_min_search,
+    "round_robin": _map_round_robin,
+    "hashed_random": _map_hashed_random,
+    "staleness_weighted": _map_staleness_weighted,
+}
+
+
+def mapping_policy(name: str):
+    try:
+        return _MAPPING[name]
+    except KeyError:
+        raise ValueError(f"unknown mapping policy {name!r}; "
+                         f"choose from {MAPPING_POLICIES}") from None
+
+
+# ==========================================================================
+# Traced beacon policies
+#
+# Common signature:  fn(delta, t, last_tx, *, dn_th, T_b) -> fire bool
+#   delta   i32/f32  |current summarized load - last broadcast value|
+#   t       f32      current tick;  last_tx f32 last transmission grant
+#   dn_th   i32      traced drift threshold;  T_b f32 traced period
+# (the k > 1 gate — a single cluster never broadcasts — stays in the
+# caller, it is topology not policy)
+# ==========================================================================
+
+def _bc_threshold(delta, t, last_tx, *, dn_th, T_b):
+    return delta >= dn_th
+
+
+def _bc_periodic(delta, t, last_tx, *, dn_th, T_b):
+    return (t - last_tx) >= T_b
+
+
+def _bc_hybrid(delta, t, last_tx, *, dn_th, T_b):
+    return jnp.logical_or(delta >= dn_th, (t - last_tx) >= T_b)
+
+
+_BEACON = {
+    "threshold": _bc_threshold,
+    "periodic": _bc_periodic,
+    "hybrid": _bc_hybrid,
+}
+
+
+def beacon_policy(name: str):
+    try:
+        return _BEACON[name]
+    except KeyError:
+        raise ValueError(f"unknown beacon policy {name!r}; "
+                         f"choose from {BEACON_POLICIES}") from None
+
+
+# ==========================================================================
+# uint32 mixing hash — identical bits in both the traced and host form
+# ==========================================================================
+
+_H1, _H2, _H3, _H4 = 0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x2C1B3C6D
+_M32 = 0xFFFFFFFF
+
+
+def _hash_u32(a, b, c):
+    """Traced xor-multiply mix of three int scalars -> uint32."""
+    h = (a.astype(jnp.uint32) * jnp.uint32(_H1)
+         ^ b.astype(jnp.uint32) * jnp.uint32(_H2)
+         ^ c.astype(jnp.uint32) * jnp.uint32(_H3))
+    h = h ^ (h >> 15)
+    h = h * jnp.uint32(_H4)
+    return h ^ (h >> 12)
+
+
+def _hash_u32_host(a: int, b: int, c: int) -> int:
+    """Python-int twin of :func:`_hash_u32` (same bits, no tracing)."""
+    h = ((a * _H1) & _M32) ^ ((b * _H2) & _M32) ^ ((c * _H3) & _M32)
+    h ^= h >> 15
+    h = (h * _H4) & _M32
+    return h ^ (h >> 12)
+
+
+# ==========================================================================
+# Host (wall-clock numpy) adapters — serving.engine / core.beacons /
+# core.mapping delegate here so the decision logic exists exactly once.
+# ==========================================================================
+
+def host_pick(name: str, view, age=None, own: int = 0, rr: int = 0,
+              salt: int = 0, i: int = 0, *, T_b: float = float("inf")) -> int:
+    """Stage-1 cluster choice in the wall-clock domain.
+
+    view (k,) load summaries (own entry exact); age (k,) seconds since
+    each summary was received (None = all fresh); own/rr/salt/i mirror
+    the traced g/rr/app/i arguments.
+    """
+    view = np.asarray(view, np.float64)
+    k = view.shape[0]
+    if name == "round_robin":
+        return int((own + rr) % k)
+    if name == "hashed_random":
+        return int(_hash_u32_host(int(salt), int(i), int(own)) % k)
+    perm = (np.arange(k) + own) % k
+    if name == "staleness_weighted":
+        # score in float32 like the traced form: f64 here would resolve
+        # near-ties differently and break the bitwise-matching contract
+        a = np.zeros(k, np.float32) if age is None \
+            else np.asarray(age, np.float32)
+        view = view.astype(np.float32) \
+            + a / np.float32(max(float(T_b), 1.0))
+    elif name != "min_search":
+        raise ValueError(f"unknown mapping policy {name!r}; "
+                         f"choose from {MAPPING_POLICIES}")
+    return int(perm[int(np.argmin(view[perm]))])
+
+
+def host_stage2(loads, alive=None) -> int:
+    """Stage-2 unit choice: argmin over the exact local load table,
+    dead units masked out."""
+    loads = np.asarray(loads, np.float64)
+    if alive is not None:
+        loads = np.where(np.asarray(alive, bool), loads, np.inf)
+    return int(np.argmin(loads))
+
+
+def host_beacon_due(name: str, delta, now: float = 0.0,
+                    last_tx: float = 0.0, *, dn_th,
+                    T_b: float = float("inf")) -> bool:
+    """Status-communication trigger in the wall-clock domain (the k > 1
+    gate stays with the caller)."""
+    if name == "threshold":
+        return bool(abs(delta) >= dn_th)
+    if name == "periodic":
+        return bool((now - last_tx) >= T_b)
+    if name == "hybrid":
+        return bool(abs(delta) >= dn_th or (now - last_tx) >= T_b)
+    raise ValueError(f"unknown beacon policy {name!r}; "
+                     f"choose from {BEACON_POLICIES}")

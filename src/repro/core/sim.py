@@ -12,19 +12,24 @@ Faithful JAX re-implementation of the paper's TLM evaluation (Sec 5):
 All state lives in fixed-shape arrays; the run is one ``lax.while_loop``
 over a bounded event queue.
 
-Parameters are split into two objects (see DESIGN.md §7):
+Parameters are split into three objects (see DESIGN.md §7/§9):
 
-  ``SimShape``  the shape-determining fields (m, k, n_childs, queue_cap,
-                max_apps).  Static JIT arguments — every distinct value
-                compiles one XLA program.
-  ``SimKnobs``  the numeric knobs (c_b, c_s, c_join, dn_th).  Traced array
-                arguments — changing them re-uses the compiled program, and
-                a batch of knob configs runs under ``jax.vmap`` in a single
-                compilation (repro.core.sweep).
+  ``SimShape``   the shape-determining fields (m, k, n_childs, queue_cap,
+                 max_apps).  Static JIT arguments — every distinct value
+                 compiles one XLA program.
+  ``SimPolicy``  the management strategy (mapping policy x beacon policy,
+                 repro.core.policies).  Also static: each combination is
+                 its own XLA program, so the untaken policy branches cost
+                 nothing at run time.
+  ``SimKnobs``   the numeric knobs (c_b, c_s, c_join, dn_th, T_b).  Traced
+                 array arguments — changing them re-uses the compiled
+                 program, and a batch of knob configs runs under
+                 ``jax.vmap`` in a single compilation (repro.core.sweep).
 
-``SimParams`` remains the user-facing bundle of both; ``run(p, ...)`` is
-unchanged for callers.  Design-space sweeps over thresholds/costs/seeds go
-through ``repro.core.sweep`` which compiles once per (m, k) shape.
+``SimParams`` remains the user-facing bundle of all three; ``run(p, ...)``
+is unchanged for callers.  Design-space sweeps over policies, thresholds,
+costs and seeds go through ``repro.core.sweep`` which compiles once per
+(shape, policy) pair.
 
 Event types:
   ARRIVE(app)             application hits its stimulus GMN; the GMN expands
@@ -48,6 +53,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import policies as P
+from repro.core.policies import DEFAULT_POLICY, SimPolicy  # noqa: F401 (re-export)
 
 INF = jnp.float32(1e18)
 
@@ -77,14 +85,18 @@ class SimKnobs(NamedTuple):
     c_b: jnp.ndarray             # f32, message delay (4 tx + 4 rx)
     c_s: jnp.ndarray             # f32, selection delay coefficient
     c_join: jnp.ndarray          # f32, GMN barrier-decrement processing
-    dn_th: jnp.ndarray           # i32, beacon threshold
+    dn_th: jnp.ndarray           # i32, beacon drift threshold
+    T_b: jnp.ndarray             # f32, beacon period/deadline (periodic,
+                                 #      hybrid, staleness_weighted)
 
     @classmethod
-    def make(cls, c_b=8.0, c_s=8.0, c_join=8.0, dn_th=4) -> "SimKnobs":
+    def make(cls, c_b=8.0, c_s=8.0, c_join=8.0, dn_th=4,
+             T_b=1000.0) -> "SimKnobs":
         return cls(jnp.asarray(c_b, jnp.float32),
                    jnp.asarray(c_s, jnp.float32),
                    jnp.asarray(c_join, jnp.float32),
-                   jnp.asarray(dn_th, jnp.int32))
+                   jnp.asarray(dn_th, jnp.int32),
+                   jnp.asarray(T_b, jnp.float32))
 
 
 @dataclass(frozen=True)
@@ -94,10 +106,13 @@ class SimParams:
     c_b: float = 8.0             # message delay (4 tx + 4 rx), bus-serialized
     c_s: float = 8.0             # selection delay coefficient
     c_join: float = 8.0          # GMN barrier-decrement processing
-    dn_th: int = 4               # beacon threshold
+    dn_th: int = 4               # beacon drift threshold
     n_childs: int = 100          # child tasks per application
     queue_cap: int = 2048
     max_apps: int = 512
+    T_b: float = 1000.0          # beacon period/deadline (traced knob)
+    mapping: str = "min_search"  # stage-1 policy (static, core/policies.py)
+    beacon: str = "threshold"    # beacon policy (static, core/policies.py)
 
     @property
     def mpk(self) -> int:
@@ -111,7 +126,11 @@ class SimParams:
     @property
     def knobs(self) -> SimKnobs:
         return SimKnobs.make(c_b=self.c_b, c_s=self.c_s, c_join=self.c_join,
-                             dn_th=self.dn_th)
+                             dn_th=self.dn_th, T_b=self.T_b)
+
+    @property
+    def policy(self) -> SimPolicy:
+        return SimPolicy(mapping=self.mapping, beacon=self.beacon)
 
     @property
     def sel_global(self) -> float:
@@ -132,12 +151,15 @@ def _log2_levels(v: int) -> float:
 
 
 class _Ctx:
-    """Per-trace context: static shape ints + traced knob scalars, presented
-    through the attribute names the event handlers historically used."""
+    """Per-trace context: static shape ints + policy + traced knob scalars,
+    presented through the attribute names the event handlers historically
+    used."""
     __slots__ = ("m", "k", "mpk", "n_childs", "queue_cap", "max_apps",
-                 "c_b", "c_s", "c_join", "dn_th", "sel_global", "sel_local")
+                 "c_b", "c_s", "c_join", "dn_th", "T_b", "policy",
+                 "sel_global", "sel_local")
 
-    def __init__(self, shape: SimShape, knobs: SimKnobs):
+    def __init__(self, shape: SimShape, knobs: SimKnobs,
+                 policy: SimPolicy = DEFAULT_POLICY):
         self.m = shape.m
         self.k = shape.k
         self.mpk = shape.mpk
@@ -148,6 +170,8 @@ class _Ctx:
         self.c_s = knobs.c_s
         self.c_join = knobs.c_join
         self.dn_th = knobs.dn_th
+        self.T_b = knobs.T_b
+        self.policy = policy
         self.sel_global = knobs.c_s * _log2_levels(shape.k)
         self.sel_local = knobs.c_s * _log2_levels(shape.mpk)
 
@@ -167,7 +191,10 @@ def make_state(p):
         # load bookkeeping
         "loads": jnp.zeros((k, mpk), jnp.int32),   # mapped tasks per PE
         "view": jnp.zeros((k, k), jnp.int32),      # GMN g's view of cluster c
+        "view_t": jnp.zeros((k, k), jnp.float32),  # tick view[g, c] was recvd
         "last_bcast": jnp.zeros((k,), jnp.int32),
+        "last_bcast_t": jnp.zeros((k,), jnp.float32),
+        "rr_ptr": jnp.zeros((k,), jnp.int32),      # per-GMN decision counter
         "beacons_tx": jnp.zeros((), jnp.int32),
         # applications
         "app_remaining": jnp.zeros((A,), jnp.int32),
@@ -232,17 +259,25 @@ def _bulk_push(st, mask, times, typ, a0, a1, a2):
 
 
 def _maybe_beacon(st, p, g, t):
-    """Threshold-based status broadcast (Sec 4.2)."""
+    """Status broadcast check (Sec 4.2, generalized).  The trigger is the
+    statically selected BeaconPolicy (core/policies.py); ``threshold`` is
+    the paper's drift rule, and the `k > 1` gate is topology, not policy."""
     load_g = st["loads"][g].sum()
     delta = jnp.abs(load_g - st["last_bcast"][g])
-    fire = jnp.logical_and(delta >= p.dn_th, p.k > 1)
+    due = P.beacon_policy(p.policy.beacon)(
+        delta, t, st["last_bcast_t"][g], dn_th=p.dn_th, T_b=p.T_b)
+    fire = jnp.logical_and(due, p.k > 1)
     # bus grant: serialize on the global bus
     t_tx = jnp.maximum(t, st["gbus_free"]) + p.c_b
     st = dict(st)
     st["gbus_free"] = jnp.where(fire, t_tx, st["gbus_free"])
     st["view"] = jnp.where(fire, _setcol(st["view"], g, load_g), st["view"])
+    st["view_t"] = jnp.where(fire, _setcol(st["view_t"], g, t_tx),
+                             st["view_t"])
     st["last_bcast"] = jnp.where(fire, _set1(st["last_bcast"], g, load_g),
                                  st["last_bcast"])
+    st["last_bcast_t"] = jnp.where(fire, _set1(st["last_bcast_t"], g, t_tx),
+                                   st["last_bcast_t"])
     st["beacons_tx"] = st["beacons_tx"] + jnp.where(fire, 1, 0)
     return st
 
@@ -264,14 +299,16 @@ def _handle_arrive(st, p, t, app, g, _unused, lengths):
 
     # own cluster count is exact (local data structure); remote via beacons
     own_view = _set1(st["view"][g], g, st["loads"][g].sum())
-    # ties break starting from the searching GMN's own index (models the
-    # hardware min-search starting at the local node) so identical stale
-    # views at different GMNs don't all pick cluster 0
-    perm = jnp.mod(jnp.arange(p.k) + g, p.k)
+    # beacon ages feed the staleness-aware policies; own entry always fresh
+    age = _set1(jnp.maximum(t - st["view_t"][g], 0.0), g, 0.0)
+    # stage-1 cluster choice is the statically selected MappingPolicy
+    # (core/policies.py); min_search reproduces the historical inline rule
+    # bitwise (min over the view, ties from the GMN's own index)
+    pick_cluster = P.mapping_policy(p.policy.mapping)
 
     def pick(carry, i):
-        view, st_gbus = carry
-        c = perm[jnp.argmin(view[perm])]           # stage-1 min-search
+        view, st_gbus, rr = carry
+        c = pick_cluster(view, age, g, rr, app, i, k=p.k, T_b=p.T_b)
         cnt = share + jnp.where(i < rem, 1, 0)
         view = _add1(view, c, cnt)                 # optimistic local bookkeeping
         # task-start message over the global bus (serialized, c_b each);
@@ -280,11 +317,12 @@ def _handle_arrive(st, p, t, app, g, _unused, lengths):
         t_bus = jnp.maximum(t_tree, st_gbus) + p.c_b
         st_gbus = jnp.where(is_remote, t_bus, st_gbus)
         t_arr = jnp.where(is_remote, t_bus, t_tree)
-        return (view, st_gbus), (c, cnt, t_arr)
+        return (view, st_gbus, rr + 1), (c, cnt, t_arr)
 
-    (new_view, gbus), (cs, cnts, t_arrs) = jax.lax.scan(
-        pick, (own_view, st["gbus_free"]), jnp.arange(ns))
+    (new_view, gbus, rr_out), (cs, cnts, t_arrs) = jax.lax.scan(
+        pick, (own_view, st["gbus_free"], st["rr_ptr"][g]), jnp.arange(ns))
     st["view"] = _set1(st["view"], g, new_view)
+    st["rr_ptr"] = _set1(st["rr_ptr"], g, rr_out)
     st["gbus_free"] = gbus
     st["app_remaining"] = _set1(st["app_remaining"], app, n)
     st["app_arrive"] = _set1(st["app_arrive"], app, t)
@@ -362,10 +400,11 @@ def _handle_join_exit(st, p, t, app, g, pe, lengths, parent_gmns):
 
 
 def simulate(shape: SimShape, knobs: SimKnobs, arrivals, arrival_gmns,
-             lengths, sim_len):
-    """Traceable core: static ``shape``, traced everything else.  This is
-    what ``repro.core.sweep`` vmaps over knob/workload batches."""
-    p = _Ctx(shape, knobs)
+             lengths, sim_len, policy: SimPolicy = DEFAULT_POLICY):
+    """Traceable core: static ``shape`` and ``policy``, traced everything
+    else.  This is what ``repro.core.sweep`` vmaps over knob/workload
+    batches (one XLA program per (shape, policy) pair)."""
+    p = _Ctx(shape, knobs, policy)
     st = make_state(p)
 
     n_apps = arrivals.shape[0]
@@ -396,7 +435,7 @@ def simulate(shape: SimShape, knobs: SimKnobs, arrivals, arrival_gmns,
     return jax.lax.while_loop(cond, body, st)
 
 
-_run = jax.jit(simulate, static_argnums=(0,))
+_run = jax.jit(simulate, static_argnums=(0, 6))
 
 
 def run(p: SimParams, arrivals, arrival_gmns, lengths, sim_len: float = 1e7):
@@ -404,19 +443,20 @@ def run(p: SimParams, arrivals, arrival_gmns, lengths, sim_len: float = 1e7):
     lengths (A, n_childs) f32 child task lengths.
 
     Returns final state dict (response times = app_done - app_arrive).
-    Compiles once per ``p.shape``; the numeric knobs (c_b, c_s, c_join,
-    dn_th) and sim_len are traced, so threshold/cost sweeps re-use the
-    compiled program.
+    Compiles once per ``(p.shape, p.policy)``; the numeric knobs (c_b,
+    c_s, c_join, dn_th, T_b) and sim_len are traced, so threshold/cost/
+    period sweeps re-use the compiled program.
     """
     return _run(p.shape, p.knobs,
                 jnp.asarray(arrivals, jnp.float32),
                 jnp.asarray(arrival_gmns, jnp.int32),
                 jnp.asarray(lengths, jnp.float32),
-                jnp.float32(sim_len))
+                jnp.float32(sim_len), p.policy)
 
 
 def compile_cache_size() -> int:
-    """Number of XLA programs compiled for ``run`` (one per SimShape).
+    """Number of XLA programs compiled for ``run`` (one per
+    (SimShape, SimPolicy) pair).
     Relies on jit's private cache introspection; returns 0 if a future
     JAX drops it (degrading compile-count reporting, not simulation)."""
     counter = getattr(_run, "_cache_size", None)

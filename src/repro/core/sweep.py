@@ -34,21 +34,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.policies import DEFAULT_POLICY, SimPolicy, policy_grid
 from repro.core.sim import (SimKnobs, SimParams, SimShape, _run,
                             compile_cache_size, simulate)
 
-__all__ = ["knob_batch", "knob_product", "sweep", "cache_size",
-           "response_times", "speedup", "mean_response", "beacons"]
+__all__ = ["knob_batch", "knob_product", "sweep", "sweep_policies",
+           "policy_grid", "cache_size", "response_times", "speedup",
+           "mean_response", "beacons"]
 
 
 def _as_shape(p) -> SimShape:
     return p.shape if isinstance(p, SimParams) else p
 
 
-def knob_batch(*, c_b=8.0, c_s=8.0, c_join=8.0, dn_th=4) -> SimKnobs:
+def knob_batch(*, c_b=8.0, c_s=8.0, c_join=8.0, dn_th=4,
+               T_b=1000.0) -> SimKnobs:
     """Build a batch of B knob configs.  Each argument is a scalar
     (broadcast) or a length-B sequence; sequences must agree on B."""
-    vals = {"c_b": c_b, "c_s": c_s, "c_join": c_join, "dn_th": dn_th}
+    vals = {"c_b": c_b, "c_s": c_s, "c_join": c_join, "dn_th": dn_th,
+            "T_b": T_b}
     sizes = {name: len(v) for name, v in vals.items()
              if np.ndim(v) == 1}
     if len(set(sizes.values())) > 1:
@@ -60,49 +64,57 @@ def knob_batch(*, c_b=8.0, c_s=8.0, c_join=8.0, dn_th=4) -> SimKnobs:
     return SimKnobs(c_b=col(vals["c_b"], np.float32),
                     c_s=col(vals["c_s"], np.float32),
                     c_join=col(vals["c_join"], np.float32),
-                    dn_th=col(vals["dn_th"], np.int32))
+                    dn_th=col(vals["dn_th"], np.int32),
+                    T_b=col(vals["T_b"], np.float32))
 
 
-def knob_product(*, c_b=(8.0,), c_s=(8.0,), c_join=(8.0,),
-                 dn_th=(4,)) -> SimKnobs:
+def knob_product(*, c_b=(8.0,), c_s=(8.0,), c_join=(8.0,), dn_th=(4,),
+                 T_b=(1000.0,)) -> SimKnobs:
     """Cartesian product of knob axes, flattened to one batch axis in
-    ``itertools.product`` order (c_b outermost, dn_th innermost)."""
+    ``itertools.product`` order (c_b outermost, T_b innermost)."""
     rows = list(itertools.product(np.atleast_1d(c_b), np.atleast_1d(c_s),
-                                  np.atleast_1d(c_join), np.atleast_1d(dn_th)))
-    cb, cs, cj, th = (np.asarray(col) for col in zip(*rows))
+                                  np.atleast_1d(c_join),
+                                  np.atleast_1d(dn_th), np.atleast_1d(T_b)))
+    cb, cs, cj, th, tb = (np.asarray(col) for col in zip(*rows))
     return SimKnobs(c_b=jnp.asarray(cb, jnp.float32),
                     c_s=jnp.asarray(cs, jnp.float32),
                     c_join=jnp.asarray(cj, jnp.float32),
-                    dn_th=jnp.asarray(th, jnp.int32))
+                    dn_th=jnp.asarray(th, jnp.int32),
+                    T_b=jnp.asarray(tb, jnp.float32))
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def _sweep(shape, knobs, arrivals, gmns, lengths, sim_len):
+@functools.partial(jax.jit, static_argnums=(0, 6))
+def _sweep(shape, knobs, arrivals, gmns, lengths, sim_len,
+           policy=DEFAULT_POLICY):
     def per_workload(a, g, l):
         return jax.vmap(
-            lambda kn: simulate(shape, kn, a, g, l, sim_len))(knobs)
+            lambda kn: simulate(shape, kn, a, g, l, sim_len, policy))(knobs)
     # out_axes=1: knob-config axis stays leading, workload axis second
     return jax.vmap(per_workload, in_axes=0, out_axes=1)(
         arrivals, gmns, lengths)
 
 
 def sweep(shape, knobs: SimKnobs, workload, sim_len: float = 1e7,
-          mode: str = "auto"):
-    """Run B knob configs x S workloads with one compilation per shape.
+          mode: str = "auto", policy: SimPolicy = DEFAULT_POLICY):
+    """Run B knob configs x S workloads with one compilation per
+    (shape, policy).
 
     shape     SimShape (or SimParams, whose .shape is taken).
     knobs     SimKnobs with leading axis (B,) — see knob_batch/knob_product.
     workload  (arrivals (S, A), arrival_gmns (S, A), lengths (S, A, n))
               as produced by workloads.interference_batch / *_grid.
+    policy    SimPolicy (mapping x beacon, core/policies.py).  Static —
+              every combination is its own XLA program; sweep the policy
+              axis with :func:`sweep_policies`.
     mode      execution strategy; results are bitwise identical across
               modes (tests/test_sweep.py):
               - "vmap": the whole grid is ONE batched XLA program (one
-                compile per (shape, B, S)).  Wins on accelerators where
-                lanes vectorize; on CPU the batched while-loop pays for
-                every event handler in every lane each step.
+                compile per (shape, policy, B, S)).  Wins on accelerators
+                where lanes vectorize; on CPU the batched while-loop pays
+                for every event handler in every lane each step.
               - "seq": warm re-runs of the single-config program (one
-                compile per shape, zero recompiles across the grid) —
-                the fast path on CPU.
+                compile per (shape, policy), zero recompiles across the
+                grid) — the fast path on CPU.
               - "auto" (default): "seq" on CPU, "vmap" elsewhere.
 
     Returns the final-state dict with every leaf batched to (B, S, ...).
@@ -122,23 +134,42 @@ def sweep(shape, knobs: SimKnobs, workload, sim_len: float = 1e7,
         mode = "seq" if jax.default_backend() == "cpu" else "vmap"
     if mode == "vmap":
         return _sweep(shape, knobs, arrivals, gmns, lengths,
-                      jnp.float32(sim_len))
+                      jnp.float32(sim_len), policy)
     if mode != "seq":
         raise ValueError(f"unknown sweep mode: {mode!r}")
     b, s = knobs.dn_th.shape[0], arrivals.shape[0]
     sl = jnp.float32(sim_len)
     outs = [_run(shape, SimKnobs(*(leaf[i] for leaf in knobs)),
-                 arrivals[j], gmns[j], lengths[j], sl)
+                 arrivals[j], gmns[j], lengths[j], sl, policy)
             for i in range(b) for j in range(s)]
     return jax.tree.map(
         lambda *leaves: jnp.stack(leaves).reshape((b, s) + leaves[0].shape),
         *outs)
 
 
+def sweep_policies(shape, knobs: SimKnobs, workload, policies=None,
+                   sim_len: float = 1e7, mode: str = "auto") -> dict:
+    """The policy axis of the design space: run the (B x S) knob/workload
+    grid once per (mapping, beacon) combination.
+
+    ``policies`` is an iterable of SimPolicy (default: the full
+    ``policy_grid()``).  Policies are static, so each combination costs
+    one compilation; the knob/workload grid inside each is free (§7).
+
+    Returns {(mapping, beacon): state dict with (B, S, ...) leaves}.
+    """
+    if policies is None:
+        policies = policy_grid()
+    return {(pol.mapping, pol.beacon):
+            sweep(shape, knobs, workload, sim_len, mode, policy=pol)
+            for pol in policies}
+
+
 def cache_size() -> int:
-    """Total XLA programs compiled for sweeping: one per (SimShape, B, S)
-    in vmap mode plus one per SimShape in seq mode.  Returns only the seq
-    count if a future JAX drops jit's private cache introspection."""
+    """Total XLA programs compiled for sweeping: one per
+    (SimShape, SimPolicy, B, S) in vmap mode plus one per
+    (SimShape, SimPolicy) in seq mode.  Returns only the seq count if a
+    future JAX drops jit's private cache introspection."""
     counter = getattr(_sweep, "_cache_size", None)
     vmap_count = counter() if callable(counter) else 0
     return vmap_count + compile_cache_size()

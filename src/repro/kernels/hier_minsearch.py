@@ -10,7 +10,13 @@ winning cluster — then applies the load update in-place, sequentially for a
 batch of T tasks (the sequential dependence is fundamental: decision t+1
 must see the load of decision t, exactly like the paper's GMN pipeline).
 
-This is the serving scheduler's hot loop (`repro.serving.engine`).
+This is the batch mapping path: `core/mapping.map_batch` routes here
+through `kernels.ops.assign_tasks` (compiled on TPU, ``interpret=True``
+everywhere else), and `tests/test_kernels_minsearch.py` pins it
+decision-for-decision — tie cases included — to the pure-JAX oracle
+`kernels.ref.assign_tasks_ref`.  The wall-clock serving engine
+(`repro.serving.engine`) makes the same two-stage decision per request
+through the numpy adapters in `core/policies.py`.
 """
 from __future__ import annotations
 

@@ -265,14 +265,12 @@ def ssm_decode(h, x, dt, A, Bc, Cc, D_skip):
     return _ref.ssm_decode_ref(h, x, dt, A, Bc, Cc, D_skip)
 
 
-@jax.jit
-def _assign_tasks_jit(loads, costs):
-    return _ref.assign_tasks_ref(loads, costs)
-
-
 def assign_tasks(loads, costs):
-    """Two-stage min-search task mapping (paper Sec 4.1)."""
-    if on_tpu():
-        from repro.kernels.hier_minsearch import assign_tasks as pallas_assign
-        return pallas_assign(loads, costs)
-    return _assign_tasks_jit(loads, costs)
+    """Two-stage min-search task mapping (paper Sec 4.1).
+
+    Always routes through the Pallas kernel — compiled on TPU,
+    ``interpret=True`` elsewhere — so the batch mapping path exercises
+    the exact kernel the hardware runs (decision-for-decision equal to
+    the pure-JAX oracle, tests/test_kernels_minsearch.py)."""
+    from repro.kernels.hier_minsearch import assign_tasks as pallas_assign
+    return pallas_assign(loads, costs, interpret=not on_tpu())

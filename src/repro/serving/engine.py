@@ -4,11 +4,16 @@ task manager.
 Topology (DESIGN.md §2): the fleet is k clusters (pods / mesh slices); each
 cluster scheduler owns its device groups' exact load table and a
 beacon-synced view of remote clusters.  A request is placed in two stages —
-stage 1 picks the cluster by min-search over the (possibly stale) views,
-stage 2 picks the device group by min-search over the exact local table —
-and never migrates (map-once, Sec 4.1).  Cluster schedulers exchange
-``status-beacon`` messages only when their load drifted by >= dn_th
-(Sec 4.2), so scheduler chatter is O(load-change/dn_th), not O(requests).
+stage 1 picks the cluster over the (possibly stale) views, stage 2 picks
+the device group by min-search over the exact local table — and never
+migrates (map-once, Sec 4.1).  Both decisions and the status-communication
+trigger delegate to the pluggable policy core (``core/policies.py``,
+DESIGN.md §9) through its wall-clock numpy adapters: with the default
+``min_search`` + ``threshold`` pair, schedulers exchange ``status-beacon``
+messages only when their load drifted by >= dn_th (Sec 4.2), so scheduler
+chatter is O(load-change/dn_th), not O(requests); ``periodic``/``hybrid``
+beacons and ``round_robin``/``hashed_random``/``staleness_weighted``
+mapping run through the same two lines of adapter code.
 
 The engine below is the *control plane*; the data plane (model decode
 steps) runs through launch/steps.py.  `FleetSim` wires k schedulers +
@@ -28,7 +33,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core import beacons as B
+from repro.core import policies as P
 from repro.core.messages import Message, MsgType, beacon, task_start
 
 
@@ -52,23 +57,44 @@ def request_cost(req: Request) -> float:
 
 
 class ClusterScheduler:
-    """One GMN: exact local (groups,) load table + stale remote summaries."""
+    """One GMN: exact local (groups,) load table + stale remote summaries.
 
-    def __init__(self, cluster_id: int, k: int, n_groups: int, dn_th: int):
+    A thin wall-clock adapter over ``core/policies.py``: stage-1/stage-2
+    placement and the beacon trigger are the shared policy functions; this
+    class only keeps the views, timestamps, and the message log."""
+
+    def __init__(self, cluster_id: int, k: int, n_groups: int, dn_th: int,
+                 *, mapping: str = "min_search", beacon: str = "threshold",
+                 T_b: float = float("inf")):
+        if mapping not in P.MAPPING_POLICIES:
+            raise ValueError(f"unknown mapping policy {mapping!r}; "
+                             f"choose from {P.MAPPING_POLICIES}")
+        if beacon not in P.BEACON_POLICIES:
+            raise ValueError(f"unknown beacon policy {beacon!r}; "
+                             f"choose from {P.BEACON_POLICIES}")
+        if mapping == "staleness_weighted" and not np.isfinite(T_b):
+            raise ValueError("staleness_weighted needs a finite T_b: with "
+                             "T_b=inf the age penalty is zero and the "
+                             "policy degenerates to min_search")
         self.cid = cluster_id
         self.k = k
         self.n_groups = n_groups
         self.dn_th = dn_th
+        self.mapping = mapping
+        self.beacon = beacon
+        self.T_b = T_b
         self.local = np.zeros(n_groups, np.float64)
         self.remote = np.zeros(k, np.float64)     # beacon view (self exact)
+        self.remote_t = np.zeros(k, np.float64)   # wall-clock of last receipt
         self.last_bcast = 0.0
+        self.last_tx = 0.0
+        self.map_ctr = 0                          # round-robin pointer / salt
         self.alive = np.ones(n_groups, bool)
         self.tx_log: list[Message] = []
 
-    # -- stage 2: exact local min-search ------------------------------------
+    # -- stage 2: exact local min-search (core/policies.host_stage2) --------
     def place_local(self, req: Request) -> int:
-        masked = np.where(self.alive, self.local, np.inf)
-        g = int(np.argmin(masked))
+        g = P.host_stage2(self.local, self.alive)
         self.local[g] += request_cost(req)
         req.cluster, req.group = self.cid, g
         self.tx_log.append(task_start(self.cid, g, req.rid, 0))
@@ -80,29 +106,37 @@ class ClusterScheduler:
     def total_load(self) -> float:
         return float(self.local[self.alive].sum())
 
-    # -- threshold beacons ---------------------------------------------------
-    def maybe_beacon(self) -> Optional[Message]:
+    # -- status beacons (core/policies.host_beacon_due) ----------------------
+    def maybe_beacon(self, now: float = 0.0) -> Optional[Message]:
         load = self.total_load()
-        if abs(load - self.last_bcast) >= self.dn_th and self.k > 1:
+        due = P.host_beacon_due(self.beacon, load - self.last_bcast, now,
+                                self.last_tx, dn_th=self.dn_th, T_b=self.T_b)
+        if due and self.k > 1:
             self.last_bcast = load
+            self.last_tx = now
             msg = beacon(self.cid, int(load))
             self.tx_log.append(msg)
             return msg
         return None
 
-    def recv_beacon(self, msg: Message):
+    def recv_beacon(self, msg: Message, now: float = 0.0):
         self.remote[msg.src] = msg.data[0]
+        self.remote_t[msg.src] = now
 
     def kill_group(self, g: int):
         self.alive[g] = False
         self.local[g] = 0.0
 
-    # -- stage 1: cluster choice over (stale) views --------------------------
-    def pick_cluster(self) -> int:
+    # -- stage 1: cluster choice (core/policies.host_pick) -------------------
+    def pick_cluster(self, now: float = 0.0, salt: int = 0) -> int:
         view = self.remote.copy()
         view[self.cid] = self.total_load()         # own view exact
-        order = (np.arange(self.k) + self.cid) % self.k
-        return int(order[int(np.argmin(view[order]))])
+        age = now - self.remote_t
+        age[self.cid] = 0.0
+        c = P.host_pick(self.mapping, view, age, self.cid, self.map_ctr,
+                        salt, T_b=self.T_b)
+        self.map_ctr += 1
+        return c
 
 
 class FleetSim:
@@ -113,12 +147,18 @@ class FleetSim:
     without TPU hardware."""
 
     def __init__(self, k: int = 4, groups_per_cluster: int = 8,
-                 dn_th: int = 4, tokens_per_tick: float = 8.0):
+                 dn_th: int = 4, tokens_per_tick: float = 8.0,
+                 *, mapping: str = "min_search", beacon: str = "threshold",
+                 T_b: float = float("inf")):
         self.k = k
-        self.schedulers = [ClusterScheduler(c, k, groups_per_cluster, dn_th)
+        self.schedulers = [ClusterScheduler(c, k, groups_per_cluster, dn_th,
+                                            mapping=mapping, beacon=beacon,
+                                            T_b=T_b)
                            for c in range(k)]
         self.tokens_per_tick = tokens_per_tick
-        self.active: dict[int, list[Request]] = {}
+        # keyed by (cluster, group): a composite int key collides silently
+        # once a cluster has >= 1000 groups
+        self.active: dict[tuple[int, int], list[Request]] = {}
         self.queue: list[Request] = []
         self.finished: list[Request] = []
         self.beacons_tx = 0
@@ -129,25 +169,25 @@ class FleetSim:
         entry = via_cluster if via_cluster is not None \
             else next(self._counter) % self.k
         sched = self.schedulers[entry]
-        target = sched.pick_cluster()               # stage 1 (stale view ok)
+        target = sched.pick_cluster(self.t, req.rid)  # stage 1 (stale view ok)
         tsched = self.schedulers[target]
         g = tsched.place_local(req)                 # stage 2 (exact)
-        self.active.setdefault(target * 1000 + g, []).append(req)
+        self.active.setdefault((target, g), []).append(req)
         self._broadcast(tsched)
 
     def _broadcast(self, sched: ClusterScheduler):
-        msg = sched.maybe_beacon()
+        msg = sched.maybe_beacon(self.t)
         if msg is not None:
             self.beacons_tx += 1
             for s in self.schedulers:
                 if s.cid != sched.cid:
-                    s.recv_beacon(msg)
+                    s.recv_beacon(msg, self.t)
 
     def tick(self, dt: float = 1.0):
         """Advance decode: each group serves its batch at a shared rate."""
         self.t += dt
         for key, reqs in list(self.active.items()):
-            c, g = divmod(key, 1000)
+            c, g = key
             sched = self.schedulers[c]
             if not sched.alive[g] or not reqs:
                 if not reqs:
@@ -167,13 +207,17 @@ class FleetSim:
                 self.active[key] = still
             else:
                 self.active.pop(key)
+        # poll every scheduler once per tick, not just those with active
+        # requests: a drained cluster's load drop (and the periodic/hybrid
+        # T_b deadline) must still reach the remote views
+        for sched in self.schedulers:
             self._broadcast(sched)
 
     def kill(self, cluster: int, group: int):
         """Fail a worker group: requeue its in-flight requests elsewhere."""
         sched = self.schedulers[cluster]
         sched.kill_group(group)
-        orphans = self.active.pop(cluster * 1000 + group, [])
+        orphans = self.active.pop((cluster, group), [])
         self._broadcast(sched)
         for r in orphans:
             r.cluster = r.group = -1

@@ -36,6 +36,39 @@ def test_interference_respects_active_fraction():
     assert finite.max() <= 0.6 * 1e6
 
 
+def test_bursty_mmpp_workload_sane():
+    p = SimParams(m=16, k=4, n_childs=16, max_apps=64)
+    arr, gmns, lens = W.bursty(p, sim_len=1e6, seed=0)
+    finite = arr[arr < 1e17]
+    assert len(finite) > 0
+    assert (np.diff(finite) >= 0).all()          # arrivals sorted
+    assert finite.max() <= 0.9 * 1e6
+    assert (gmns[: len(finite)] < 4).all()
+    assert lens.shape == (64, 16)
+
+
+def test_hotspot_workload_skews_to_hot_gmn():
+    p = SimParams(m=16, k=4, n_childs=16, max_apps=256)
+    arr, gmns, _ = W.hotspot(p, sim_len=1e7, hot_frac=0.8, hot_gmn=2,
+                             seed=1)
+    n = int((arr < 1e17).sum())
+    assert n > 50
+    frac = float((gmns[:n] == 2).mean())
+    assert 0.7 < frac <= 1.0                     # ~hot_frac + uniform share
+
+
+def test_heavy_tail_lengths_capped_and_skewed():
+    p = SimParams(m=16, k=4, n_childs=64, max_apps=32)
+    rng = np.random.default_rng(0)
+    lens = W.heavy_tail_lengths(p, rng)
+    assert lens.shape == (32, 64)
+    assert lens.max() <= 8 * W.MAX_LEN + 1e-3
+    assert np.median(lens) < lens.mean()         # right-skewed
+    arr, gmns, lens2 = W.bursty(p, sim_len=5e5, seed=3,
+                                length_dist="pareto")
+    assert lens2.max() > W.MAX_LEN               # tail exceeds uniform cap
+
+
 def test_fleet_one_group_degenerate():
     """k=1, 1 group: everything lands there; still completes."""
     from repro.serving.engine import FleetSim, Request

@@ -1,0 +1,233 @@
+"""Policy-core semantics: traced/host agreement, staleness bounds, and
+the design-space distinguishability of the mapping/beacon policies
+(core/policies.py, DESIGN.md §9)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import beacons as B
+from repro.core import policies as P
+from repro.core import sweep as SW
+from repro.core import workloads as W
+from repro.core.sim import SimParams, run
+
+
+def _params(**kw):
+    kw.setdefault("m", 16)
+    kw.setdefault("k", 4)
+    kw.setdefault("n_childs", 16)
+    kw.setdefault("max_apps", 32)
+    kw.setdefault("queue_cap", 512)
+    return SimParams(**kw)
+
+
+# --------------------------------------------------------------------------
+# Threshold beacon policy: staleness bound (paper Sec 4.2 / Sec 6)
+# --------------------------------------------------------------------------
+
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 100)),
+                min_size=1, max_size=80),
+       st.integers(1, 16))
+@settings(max_examples=40, deadline=None)
+def test_threshold_bounds_staleness_by_dn_th_minus_1(updates, dn_th):
+    """After a node reports, every remote view of it is within dn_th - 1
+    of the reported load: drift >= dn_th forces a broadcast, so the error
+    a remote can carry is at most dn_th - 1."""
+    s = B.BeaconState.create(k=3, dn_th=dn_th)
+    true = np.zeros(3, np.int64)
+    for node, load in updates:
+        s = B.update(s, node, load)
+        true[node] = load
+        err = np.abs(s.view - true[None, :])
+        off_diag = ~np.eye(3, dtype=bool)
+        assert err[off_diag].max() <= dn_th - 1
+    assert B.staleness(s, true) <= dn_th - 1
+
+
+def test_periodic_and_hybrid_beacon_state_machine():
+    s = B.BeaconState.create(k=2, dn_th=10**9, policy="periodic", T_b=10.0)
+    s = B.update(s, 0, 50, now=5.0)
+    assert s.tx_count == 0                    # deadline not reached
+    s = B.update(s, 0, 51, now=10.0)
+    assert s.tx_count == 1                    # fired on deadline, not drift
+    h = B.BeaconState.create(k=2, dn_th=4, policy="hybrid", T_b=100.0)
+    h = B.update(h, 0, 4, now=1.0)
+    assert h.tx_count == 1                    # drift arm fires early
+
+
+# --------------------------------------------------------------------------
+# Traced vs host adapters: one logic, two domains
+# --------------------------------------------------------------------------
+
+def test_hash_traced_matches_host():
+    for a, b, c in [(0, 0, 0), (1, 2, 3), (123456, 7, 89), (2**31 - 1, 5, 9)]:
+        traced = int(P._hash_u32(jnp.asarray(a), jnp.asarray(b),
+                                 jnp.asarray(c)))
+        assert traced == P._hash_u32_host(a, b, c)
+
+
+@pytest.mark.parametrize("name", P.MAPPING_POLICIES)
+def test_host_pick_matches_traced(name):
+    rng = np.random.default_rng(0)
+    fn = P.mapping_policy(name)
+    for trial in range(16):
+        k = int(rng.integers(2, 9))
+        view = rng.integers(0, 6, k)
+        age = rng.uniform(0, 5000, k)
+        g = int(rng.integers(0, k))
+        age[g] = 0.0
+        rr, app, i = (int(rng.integers(0, 50)) for _ in range(3))
+        traced = int(fn(jnp.asarray(view), jnp.asarray(age, jnp.float32),
+                        jnp.asarray(g), jnp.asarray(rr), jnp.asarray(app),
+                        jnp.asarray(i), k=k, T_b=jnp.float32(1000.0)))
+        host = P.host_pick(name, view, age, g, rr, app, i, T_b=1000.0)
+        assert traced == host, (name, trial)
+
+
+def test_host_stage2_masks_dead_units():
+    assert P.host_stage2([3.0, 1.0, 2.0]) == 1
+    assert P.host_stage2([3.0, 1.0, 2.0], alive=[True, False, True]) == 2
+
+
+def test_unknown_policy_names_raise():
+    with pytest.raises(ValueError):
+        P.SimPolicy(mapping="nope")
+    with pytest.raises(ValueError):
+        P.SimPolicy(beacon="nope")
+    with pytest.raises(ValueError):
+        P.host_pick("nope", np.zeros(2))
+    with pytest.raises(ValueError):
+        P.host_beacon_due("nope", 1, dn_th=1)
+
+
+# --------------------------------------------------------------------------
+# Simulator-level policy semantics
+# --------------------------------------------------------------------------
+
+def test_min_search_vs_round_robin_identical_when_views_uniform():
+    """With a single application the deciding GMN's view is uniform (all
+    zeros) for the whole fork expansion, and min_search's own-index-first
+    tie-break walks clusters in exactly round_robin's order — the two
+    policies are bitwise indistinguishable."""
+    wl = W.independent_tasks(_params(), n_apps=1)
+    d1 = run(_params(), *wl, 1e7)
+    d2 = run(_params(mapping="round_robin"), *wl, 1e7)
+    assert np.array_equal(np.asarray(d1["app_done"]),
+                          np.asarray(d2["app_done"]))
+    assert np.array_equal(np.asarray(d1["beacons_tx"]),
+                          np.asarray(d2["beacons_tx"]))
+
+
+def test_min_search_vs_round_robin_differ_when_views_differ():
+    """Under interference with a coarse threshold the views diverge (own
+    column exact, remote columns stale) and the view-driven policy makes
+    different decisions.  (At dn_th=1 the views stay so fresh and the
+    saturated clusters so equalized that the two policies still coincide
+    — distinguishability requires differing views, not just load.)"""
+    p = _params(dn_th=4)
+    wl = W.interference(p, sim_len=3e5, seed=0)
+    s1 = run(p, *wl, 3e5)
+    s2 = run(_params(dn_th=4, mapping="round_robin"), *wl, 3e5)
+    same_done = np.array_equal(np.asarray(s1["app_done"]),
+                               np.asarray(s2["app_done"]))
+    same_btx = int(s1["beacons_tx"]) == int(s2["beacons_tx"])
+    assert not (same_done and same_btx)
+
+
+def test_hybrid_with_unreachable_deadline_equals_threshold_bitwise():
+    p_th = _params(dn_th=4, T_b=1e9)
+    p_hy = _params(dn_th=4, T_b=1e9, beacon="hybrid")
+    wl = W.interference(p_th, sim_len=3e5, seed=1)
+    s1, s2 = run(p_th, *wl, 3e5), run(p_hy, *wl, 3e5)
+    assert int(s1["beacons_tx"]) == int(s2["beacons_tx"])
+    assert np.array_equal(np.asarray(s1["app_done"]),
+                          np.asarray(s2["app_done"]))
+
+
+def test_periodic_beacon_decoupled_from_drift():
+    """periodic fires on the T_b deadline even when the threshold arm
+    would stay silent, and stays silent when the deadline is unreachable."""
+    wl = W.interference(_params(), sim_len=3e5, seed=0)
+    silent = run(_params(dn_th=10**6, beacon="periodic", T_b=1e9), *wl, 3e5)
+    assert int(silent["beacons_tx"]) == 0
+    chatty = run(_params(dn_th=10**6, beacon="periodic", T_b=500.0),
+                 *wl, 3e5)
+    assert int(chatty["beacons_tx"]) > 0
+
+
+def test_policy_grid_runs_through_sweep():
+    """>= 3 mapping x 3 beacon combinations end-to-end through sweep():
+    every combo completes all apps without event-queue drops."""
+    p = _params()
+    wl = W.interference_batch(p, seeds=(0,), sim_len=2e5)
+    knobs = SW.knob_batch(dn_th=(2, 8), T_b=1000.0)
+    mappings = ("min_search", "round_robin", "staleness_weighted")
+    out = SW.sweep_policies(p.shape, knobs, wl,
+                            SW.policy_grid(mappings, P.BEACON_POLICIES),
+                            sim_len=2e5)
+    assert len(out) == 9
+    for key, st_ in out.items():
+        assert np.asarray(st_["dropped"]).sum() == 0, key
+        assert np.isfinite(SW.mean_response(st_)).all(), key
+    # the beacon axis really is live: periodic != threshold traffic
+    b_th = SW.beacons(out[("min_search", "threshold")])
+    b_pe = SW.beacons(out[("min_search", "periodic")])
+    assert not np.array_equal(b_th, b_pe)
+
+
+# --------------------------------------------------------------------------
+# Serving engine rides the same policies (wall-clock adapter)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mapping", P.MAPPING_POLICIES)
+def test_fleet_completes_under_every_mapping_policy(mapping):
+    from repro.serving.engine import FleetSim, Request
+    t_b = 50.0 if mapping == "staleness_weighted" else float("inf")
+    fleet = FleetSim(k=4, groups_per_cluster=2, dn_th=2, mapping=mapping,
+                     T_b=t_b)
+    for i in range(32):
+        fleet.submit(Request(sort_key=float(i), rid=i, max_new=8))
+    for _ in range(300):
+        if not fleet.active:
+            break
+        fleet.tick()
+    assert len(fleet.finished) == 32
+    if mapping in ("min_search", "round_robin"):
+        per_cluster = fleet.loads().sum(axis=1)
+        assert per_cluster.max() - per_cluster.min() < 1e-9
+
+
+def test_fleet_staleness_weighted_requires_finite_T_b():
+    from repro.serving.engine import FleetSim
+    with pytest.raises(ValueError, match="finite T_b"):
+        FleetSim(k=2, groups_per_cluster=2, dn_th=2,
+                 mapping="staleness_weighted")
+
+
+def test_fleet_periodic_beacons_fire_on_wall_clock():
+    from repro.serving.engine import FleetSim, Request
+    fleet = FleetSim(k=2, groups_per_cluster=2, dn_th=10**9,
+                     beacon="periodic", T_b=5.0)
+    fleet.submit(Request(sort_key=0.0, rid=0, max_new=10**6))
+    assert fleet.beacons_tx == 0
+    for _ in range(20):
+        fleet.tick()
+    assert fleet.beacons_tx > 0
+
+
+def test_fleet_drained_cluster_still_broadcasts():
+    """A cluster whose last request finished must still get its beacon
+    polled: under periodic/hybrid policies the load drop would otherwise
+    never reach remote views and the idle cluster would look busy forever."""
+    from repro.serving.engine import FleetSim, Request
+    fleet = FleetSim(k=2, groups_per_cluster=1, dn_th=10**9,
+                     beacon="periodic", T_b=3.0)
+    fleet.submit(Request(sort_key=0.0, rid=0, max_new=8), via_cluster=0)
+    while fleet.active:
+        fleet.tick()
+    for _ in range(10):
+        fleet.tick()                       # no active keys left anywhere
+    assert fleet.beacons_tx > 0
+    # remote views converged to the true (zero) load
+    assert fleet.schedulers[1].remote[fleet.finished[0].cluster] == 0.0

@@ -73,6 +73,21 @@ def test_stale_view_still_places():
     assert fleet.loads().sum() > 0
 
 
+def test_active_keys_no_collision_with_1000_plus_groups():
+    """Regression: the composite int key `cluster * 1000 + g` silently
+    collided for >= 1000 groups per cluster (cluster 0 group 1000 aliased
+    cluster 1 group 0).  Keys are (cluster, group) tuples now."""
+    n_groups = 1100
+    fleet = FleetSim(k=2, groups_per_cluster=n_groups, dn_th=10**9)
+    for r in _reqs(2 * n_groups):
+        fleet.submit(r)
+    # each group of each cluster holds exactly one request, no aliasing
+    assert len(fleet.active) == 2 * n_groups
+    assert all(isinstance(key, tuple) for key in fleet.active)
+    assert (0, 1000) in fleet.active and (1, 0) in fleet.active
+    assert sum(len(v) for v in fleet.active.values()) == 2 * n_groups
+
+
 def test_scheduler_message_log_types():
     from repro.core.messages import MsgType
     s = ClusterScheduler(0, 2, 2, dn_th=1)

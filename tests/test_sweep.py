@@ -1,12 +1,15 @@
 """Batched sweep engine: exactness vs per-config runs, compile caching,
-and the beacon-threshold monotonicity property (paper Fig 3b)."""
+the beacon-threshold monotonicity property (paper Fig 3b), and the
+frozen pre-policy-refactor golden outputs (PR 2 bitwise gate)."""
+import hashlib
+
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import sweep as SW
 from repro.core import workloads as W
-from repro.core.sim import SimParams, run
+from repro.core.sim import SimParams, SimPolicy, run
 
 
 def _params(k=4, **kw):
@@ -85,6 +88,48 @@ def test_knob_batch_validation():
     prod = SW.knob_product(c_s=(1.0, 8.0), dn_th=(1, 2, 4))
     assert prod.dn_th.shape == (6,)
     assert np.asarray(prod.c_s).tolist() == [1.0] * 3 + [8.0] * 3
+
+
+# Golden outputs captured from the pre-policy-refactor implementation
+# (inlined min_search + threshold logic, commit 0872ddc) on this exact
+# grid: the default policy pair must keep reproducing them bitwise.
+_GOLDEN_BEACONS = [[600, 600], [351, 360], [202, 232], [72, 78]]
+_GOLDEN_APP_DONE_SHA = \
+    "72576e858be248d11e21055618ff6a1aba89ebd7f7f4ea3419d9384b59cd3efa"
+
+
+def test_default_policy_matches_pre_refactor_golden():
+    """The pluggable-policy refactor must be invisible under the default
+    (min_search, threshold) pair: beacons_tx and app_done over a
+    (dn_th x seed) grid equal the frozen pre-refactor values bitwise."""
+    p = _params()
+    wl = W.interference_batch(p, seeds=(0, 1), sim_len=3e5)
+    stb = SW.sweep(p.shape, SW.knob_batch(dn_th=THRESHOLDS), wl, 3e5)
+    assert np.asarray(stb["beacons_tx"]).tolist() == _GOLDEN_BEACONS
+    done = np.asarray(stb["app_done"], np.float32)
+    assert hashlib.sha256(done.tobytes()).hexdigest() == _GOLDEN_APP_DONE_SHA
+    # single-app anchor from the same capture
+    st1 = run(p, *W.independent_tasks(p, n_apps=1), 1e7)
+    assert float(np.asarray(st1["app_done"])[0]) == 16240.0
+    assert int(st1["beacons_tx"]) == 8
+
+
+@pytest.mark.parametrize("mapping,beacon", [
+    ("round_robin", "periodic"), ("staleness_weighted", "hybrid")])
+def test_policy_sweep_matches_per_config(mapping, beacon):
+    """Non-default policy pairs obey the same sweep-vs-run exactness
+    contract as the default pair."""
+    p = _params(mapping=mapping, beacon=beacon, T_b=700.0)
+    wl = W.interference_batch(p, seeds=(0,), sim_len=2e5)
+    stb = SW.sweep(p.shape, SW.knob_batch(dn_th=(2, 8), T_b=700.0), wl, 2e5,
+                   policy=SimPolicy(mapping, beacon))
+    for i, th in enumerate((2, 8)):
+        sti = run(_params(mapping=mapping, beacon=beacon, T_b=700.0,
+                          dn_th=th), wl[0][0], wl[1][0], wl[2][0], 2e5)
+        assert np.array_equal(np.asarray(stb["beacons_tx"])[i, 0],
+                              np.asarray(sti["beacons_tx"]))
+        assert np.array_equal(np.asarray(stb["app_done"])[i, 0],
+                              np.asarray(sti["app_done"]))
 
 
 @given(st.sampled_from([2, 4, 8]), st.integers(0, 20))
