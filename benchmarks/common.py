@@ -19,12 +19,35 @@ import time
 
 import numpy as np
 
+from repro.core.transport import TOPOLOGIES
+
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+# JSON schema version of the benchmark payloads.  v2 adds the "meta"
+# block (topology_meta below): results/*.json are self-describing about
+# which interconnect fabric produced each number.
+SCHEMA_VERSION = 2
+
+
+def topology_meta(topologies=("ideal",), **extra) -> dict:
+    """Standard self-description block for benchmark payloads: which
+    fabric models the numbers were produced under ("ideal" is the
+    pre-transport behavior, bitwise), plus the full topology vocabulary
+    so downstream tooling can interpret per-topology keys without
+    importing the simulator."""
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "topologies": list(topologies),
+        "topology_vocabulary": list(TOPOLOGIES),
+        "topology_default": "ideal",
+        **extra,
+    }
 
 
 def save(name: str, payload: dict):
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")
+    payload.setdefault("meta", topology_meta())
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=float)
     return path

@@ -3,19 +3,25 @@
 Paper Fig 3 trades synchronization traffic against decision quality along
 a single axis (the threshold dn_th of the one hard-coded strategy).  This
 benchmark generalizes that trade-off to the full pluggable policy space
-(core/policies.py): it sweeps
+(core/policies.py) *and* the interconnect fabric (core/transport.py): it
+sweeps
 
-    mapping policy x beacon policy x (dn_th, T_b) x arrival rate x seed
+    mapping policy x beacon policy x topology x (dn_th, T_b)
+                   x scenario (interference / bursty / hotspot) x seed
 
-on the batched sweep engine — the policy pair is a static axis (one XLA
-program per combination, repro.core.sweep.sweep_policies semantics), the
-numeric knobs and workloads ride the traced/vmap axes for free — and
-emits every grid point plus the set of Pareto-nondominated
-(beacons_tx, mean_response) points to ``results/policy_frontier.json``.
+on the batched sweep engine — the policy pair and the topology are
+static axes (one XLA program per combination), the numeric knobs and
+workloads ride the traced/vmap axes for free — and emits every grid
+point plus the per-scenario Pareto-nondominated (beacons_tx,
+mean_response) sets to ``results/policy_frontier.json``.  The
+``dominant_pairs`` key records which (mapping, beacon, topology) triples
+survive on each scenario's frontier (ROADMAP: where do
+``staleness_weighted``/``hybrid`` dominate the paper's default pair?).
 
-The default ``min_search`` + ``threshold`` pair is additionally checked
-bitwise against a direct ``sim.run`` call, so the generalized frontier
-provably contains today's curves.
+The default ``min_search`` + ``threshold`` pair on the ``ideal`` fabric
+is additionally checked bitwise against a direct ``sim.run`` call, and
+the legacy ``frontier`` key still holds exactly the interference/ideal
+frontier so the BENCH trajectory series stays comparable.
 
 Usage:  PYTHONPATH=src python -m benchmarks.policy_frontier [--grid tiny]
 """
@@ -31,21 +37,32 @@ from repro.core import workloads as W
 from repro.core.policies import BEACON_POLICIES, MAPPING_POLICIES
 from repro.core.sim import SimParams, run as sim_run
 
-from benchmarks.common import csv_row, save, timed
+from benchmarks.common import csv_row, save, timed, topology_meta
 
-# Pair periods keep the offered load below 1 (workloads.offered_load):
-# a saturated system backlogs until the event queue drops work, which
-# voids the response-time signal — claim_all_combos_completed gates this.
+# Pair periods / arrival rates keep the offered load below 1
+# (workloads.offered_load): a saturated system backlogs until the event
+# queue drops work, which voids the response-time signal —
+# claim_all_combos_completed gates this.
 GRIDS = {
-    # CI smoke: every policy combination end-to-end in well under a minute
+    # CI smoke: every policy x topology combination end-to-end fast
     "tiny": dict(m=16, k=4, n_childs=16, max_apps=32, queue_cap=512,
                  sim_len=4e5, thresholds=(2, 8), periods=(500.0, 4000.0),
-                 pair_periods=(36_000.0,), seeds=(0,)),
+                 pair_periods=(36_000.0,), seeds=(0,),
+                 scenario_seeds=(0,),
+                 topologies=("ideal", "hier_tree"),
+                 bursty=dict(iat_on=12_000.0, iat_off=90_000.0),
+                 hotspot=dict(mean_iat=30_000.0, hot_frac=0.6)),
     "default": dict(m=64, k=8, n_childs=50, max_apps=256, queue_cap=2048,
                     sim_len=1e6, thresholds=(1, 4, 16),
                     periods=(500.0, 2000.0, 8000.0),
-                    pair_periods=(28_000.0, 48_000.0), seeds=(0, 1)),
+                    pair_periods=(28_000.0, 48_000.0), seeds=(0, 1),
+                    scenario_seeds=(0,),
+                    topologies=("ideal", "hier_tree"),
+                    bursty=dict(iat_on=8_000.0, iat_off=80_000.0),
+                    hotspot=dict(mean_iat=24_000.0, hot_frac=0.6)),
 }
+
+SCENARIOS = ("interference", "bursty", "hotspot")
 
 
 def _knobs_for(beacon: str, thresholds, periods):
@@ -57,6 +74,25 @@ def _knobs_for(beacon: str, thresholds, periods):
     if beacon == "periodic":
         return SW.knob_batch(T_b=periods)
     return SW.knob_product(dn_th=thresholds, T_b=periods)
+
+
+def _scenario_workloads(g, p):
+    """(scenario, lane-metadata list, sweep-shaped workload) triples."""
+    out = []
+    lanes = [dict(pair_period=float(pp), seed=int(s))
+             for pp in g["pair_periods"] for s in g["seeds"]]
+    out.append(("interference", lanes,
+                W.interference_grid(p, pair_periods=g["pair_periods"],
+                                    seeds=g["seeds"],
+                                    sim_len=g["sim_len"])))
+    ss = g["scenario_seeds"]
+    out.append(("bursty", [dict(pair_period=None, seed=int(s)) for s in ss],
+                W.bursty_batch(p, seeds=ss, sim_len=g["sim_len"],
+                               **g["bursty"])))
+    out.append(("hotspot", [dict(pair_period=None, seed=int(s)) for s in ss],
+                W.hotspot_batch(p, seeds=ss, sim_len=g["sim_len"],
+                                **g["hotspot"])))
+    return out
 
 
 def _pareto_mask(xs, ys):
@@ -77,8 +113,8 @@ def run(verbose: bool = True, grid: str = "default",
                   max_apps=g["max_apps"], queue_cap=g["queue_cap"])
     sim_len = g["sim_len"]
     pair_periods, seeds = g["pair_periods"], g["seeds"]
-    wl = W.interference_grid(p, pair_periods=pair_periods, seeds=seeds,
-                             sim_len=sim_len)
+    topologies = g["topologies"]
+    scenarios = _scenario_workloads(g, p)
 
     rows = []
     t_total = 0.0
@@ -86,27 +122,32 @@ def run(verbose: bool = True, grid: str = "default",
         for beacon in beacons:
             knobs = _knobs_for(beacon, g["thresholds"], g["periods"])
             pol = SW.SimPolicy(mapping=mapping, beacon=beacon)
-            st, dt = timed(lambda: jax.tree.map(
-                np.asarray, SW.sweep(p.shape, knobs, wl, sim_len,
-                                     policy=pol)))
-            t_total += dt
-            mresp = SW.mean_response(st)            # (B, S)
-            btx = SW.beacons(st)                    # (B, S)
             th = np.asarray(knobs.dn_th)
             tb = np.asarray(knobs.T_b)
-            for i in range(btx.shape[0]):
-                for j in range(btx.shape[1]):
-                    rows.append({
-                        "mapping": mapping, "beacon": beacon,
-                        "dn_th": int(th[i]), "T_b": float(tb[i]),
-                        "pair_period": float(pair_periods[j // len(seeds)]),
-                        "seed": int(seeds[j % len(seeds)]),
-                        "beacons_tx": int(btx[i, j]),
-                        "mean_response": float(mresp[i, j]),
-                        "dropped": int(np.asarray(st["dropped"])[i, j]),
-                    })
+            for topology in topologies:
+                for scenario, lanes, wl in scenarios:
+                    st, dt = timed(lambda: jax.tree.map(
+                        np.asarray, SW.sweep(p.shape, knobs, wl, sim_len,
+                                             policy=pol,
+                                             topology=topology)))
+                    t_total += dt
+                    mresp = SW.mean_response(st)        # (B, S)
+                    btx = SW.beacons(st)                # (B, S)
+                    for i in range(btx.shape[0]):
+                        for j in range(btx.shape[1]):
+                            rows.append({
+                                "mapping": mapping, "beacon": beacon,
+                                "topology": topology, "scenario": scenario,
+                                "dn_th": int(th[i]), "T_b": float(tb[i]),
+                                "pair_period": lanes[j]["pair_period"],
+                                "seed": lanes[j]["seed"],
+                                "beacons_tx": int(btx[i, j]),
+                                "mean_response": float(mresp[i, j]),
+                                "dropped": int(st["dropped"][i, j]),
+                            })
 
-    # Bitwise anchor: the default pair reproduces a direct sim.run call
+    # Bitwise anchor: the default pair on the default fabric reproduces a
+    # direct sim.run call
     pd = SimParams(m=g["m"], k=g["k"], n_childs=g["n_childs"],
                    max_apps=g["max_apps"], queue_cap=g["queue_cap"],
                    dn_th=int(g["thresholds"][0]))
@@ -116,6 +157,8 @@ def run(verbose: bool = True, grid: str = "default",
     anchor = next(r for r in rows
                   if r["mapping"] == "min_search"
                   and r["beacon"] == "threshold"
+                  and r["topology"] == "ideal"
+                  and r["scenario"] == "interference"
                   and r["dn_th"] == int(g["thresholds"][0])
                   and r["pair_period"] == float(pair_periods[0])
                   and r["seed"] == int(seeds[0]))
@@ -127,16 +170,34 @@ def run(verbose: bool = True, grid: str = "default",
     default_bitwise = (anchor["beacons_tx"] == int(st0["beacons_tx"])
                        and anchor["mean_response"] == mr0)
 
-    # Pareto frontier over (beacons_tx, mean_response), minimizing both;
-    # lanes with no completed application carry no response-time signal
-    cand = [r for r in rows if np.isfinite(r["mean_response"])]
-    mask = _pareto_mask([r["beacons_tx"] for r in cand],
-                        [r["mean_response"] for r in cand])
+    # Pareto frontiers over (beacons_tx, mean_response), minimizing both,
+    # per scenario across the (policy x topology) space; lanes with no
+    # completed application carry no response-time signal
     for r in rows:
         r["pareto"] = False
-    for r, nd in zip(cand, mask):
-        r["pareto"] = bool(nd)
-    frontier = sorted((r for r in cand if r["pareto"]),
+    frontier_by_scenario = {}
+    dominant_pairs = {}
+    for scenario in SCENARIOS:
+        cand = [r for r in rows if r["scenario"] == scenario
+                and np.isfinite(r["mean_response"])]
+        mask = _pareto_mask([r["beacons_tx"] for r in cand],
+                            [r["mean_response"] for r in cand])
+        for r, nd in zip(cand, mask):
+            r["pareto"] = r["pareto"] or bool(nd)
+        front = sorted((r for r, nd in zip(cand, mask) if nd),
+                       key=lambda r: r["beacons_tx"])
+        frontier_by_scenario[scenario] = front
+        dominant_pairs[scenario] = sorted(
+            {(r["mapping"], r["beacon"], r["topology"]) for r in front})
+
+    # legacy frontier: the interference scenario on the ideal fabric only
+    # (the exact pre-topology grid), so the BENCH series stays comparable
+    legacy = [r for r in rows if r["scenario"] == "interference"
+              and r["topology"] == "ideal"
+              and np.isfinite(r["mean_response"])]
+    lmask = _pareto_mask([r["beacons_tx"] for r in legacy],
+                         [r["mean_response"] for r in legacy])
+    frontier = sorted((r for r, nd in zip(legacy, lmask) if nd),
                       key=lambda r: r["beacons_tx"])
     frontier_pairs = {(r["mapping"], r["beacon"]) for r in frontier}
 
@@ -144,6 +205,11 @@ def run(verbose: bool = True, grid: str = "default",
         "grid": grid,
         "rows": rows,
         "frontier": frontier,
+        "frontier_by_scenario": frontier_by_scenario,
+        "dominant_pairs": {s: [list(t) for t in v]
+                           for s, v in dominant_pairs.items()},
+        "scenarios": list(SCENARIOS),
+        "meta": topology_meta(topologies=list(topologies), grid=grid),
         "n_policy_combos": len(mappings) * len(beacons),
         "n_points": len(rows),
         "claim_default_bitwise_vs_run": bool(default_bitwise),
@@ -153,6 +219,8 @@ def run(verbose: bool = True, grid: str = "default",
             for r in rows),
         # the trade-off space is real: no single policy pair dominates
         "claim_frontier_spans_policies": len(frontier_pairs) >= 2,
+        "claim_all_scenario_frontiers_nonempty": all(
+            len(v) > 0 for v in frontier_by_scenario.values()),
     }
     save("policy_frontier", payload)
     if verbose:
@@ -160,11 +228,9 @@ def run(verbose: bool = True, grid: str = "default",
                 f"combos={payload['n_policy_combos']}"
                 f"|points={len(rows)}|frontier={len(frontier)}"
                 f"|default_bitwise={default_bitwise}")
-        for r in frontier:
-            print(f"  frontier: {r['mapping']}+{r['beacon']} "
-                  f"dn_th={r['dn_th']} T_b={r['T_b']:g} "
-                  f"pp={r['pair_period']:g} seed={r['seed']} "
-                  f"beacons={r['beacons_tx']} resp={r['mean_response']:.0f}")
+        for scenario in SCENARIOS:
+            pairs = ", ".join("+".join(t) for t in dominant_pairs[scenario])
+            print(f"  {scenario} frontier pairs: {pairs}")
     return payload
 
 

@@ -12,7 +12,7 @@ import sys
 
 def main() -> None:
     from benchmarks import baseline_compare, fig2a, fig2b, fig3a, fig3b, table5
-    from benchmarks import moe_balance, scheduler_overhead
+    from benchmarks import moe_balance, scheduler_overhead, topology_frontier
 
     print("name,us_per_call,derived")
     ok = True
@@ -28,6 +28,9 @@ def main() -> None:
     ok &= t["ordering_clustered_best"]
     c = baseline_compare.run()
     ok &= c["claim_clustered_best"]
+    tf = topology_frontier.run(grid="tiny")
+    ok &= tf["claim_clustered_lowest_total_mgmt_latency"]
+    ok &= tf["claim_ideal_bitwise_vs_run"]
     scheduler_overhead.run()
     moe_balance.run()
     print(f"# paper-claim checks {'PASS' if ok else 'FAIL'}")

@@ -1,2 +1,3 @@
 """Paper core: messages, analytic model, pluggable mapping/beacon
-policies, two-stage mapping, beacons, TLM sim, batched sweeps."""
+policies, interconnect transport topologies, two-stage mapping, beacons,
+TLM sim, batched sweeps."""

@@ -31,6 +31,17 @@ is unchanged for callers.  Design-space sweeps over policies, thresholds,
 costs and seeds go through ``repro.core.sweep`` which compiles once per
 (shape, policy) pair.
 
+All management messages (task-start groups, join-exits and their
+forwards, status beacons) route through the interconnect transport model
+(``repro.core.transport``, DESIGN.md §10).  The fabric is a fourth
+static axis next to shape and policy: ``Topology("ideal")`` reproduces
+the historical single-global-bus behavior bitwise, while ``shared_bus``
+/ ``hier_tree`` / ``mesh2d`` model contention and per-receiver beacon
+skew — a fired beacon becomes k-1 in-flight entries in the ``(k, k)``
+``bcn_t``/``bcn_val`` delivery matrix plus one BEACON_RX event per
+receiver, so each GMN's ``view_t`` (and hence the staleness ``age`` fed
+to the mapping policies) is genuinely heterogeneous.
+
 Event types:
   ARRIVE(app)             application hits its stimulus GMN; the GMN expands
                           the recursive fork tree (stage-1 decisions over its
@@ -40,10 +51,15 @@ Event types:
                           decision + one local-bus task-start per child.
   JOIN_EXIT(app, g, p)    child finished: local-bus join-exit message,
                           barrier decrement, load decrement, beacon check.
+  BEACON_RX(src, rcv, v)  (non-ideal topologies only) the in-flight beacon
+                          from GMN src reaches receiver rcv carrying load
+                          summary v; rcv's view/view_t update here.
 
 Deviations from the paper (documented in DESIGN.md §8): helper tasks occupy
-the management plane (GMN time) rather than PEs; per-receiver beacon skew is
-ignored (view updates atomically at bus-grant time).
+the management plane (GMN time) rather than PEs.  Per-receiver beacon skew
+(former deviation §8.2) is now modeled by the non-ideal topologies; the
+default ``ideal`` fabric retains the atomic-update behavior for bitwise
+continuity with the published golden results.
 """
 from __future__ import annotations
 
@@ -55,13 +71,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import policies as P
+from repro.core import transport as T
 from repro.core.policies import DEFAULT_POLICY, SimPolicy  # noqa: F401 (re-export)
+from repro.core.transport import DEFAULT_TOPOLOGY, Topology  # noqa: F401 (re-export)
 
 INF = jnp.float32(1e18)
 
 EV_ARRIVE = 0
 EV_LOCAL_SPAWN = 1
 EV_JOIN_EXIT = 2
+EV_BEACON_RX = 3
 
 
 @dataclass(frozen=True)
@@ -73,10 +92,22 @@ class SimShape:
     n_childs: int = 100          # child tasks per application
     queue_cap: int = 2048
     max_apps: int = 512
+    record_s1: bool = False      # record per-decision stage-1 traces
+                                 # (view/age/choice) for serving.replay
 
     @property
     def mpk(self) -> int:
         return self.m // self.k
+
+    @property
+    def ns(self) -> int:
+        """Static stage-1 fan-out: cluster targets per application."""
+        return stage1_targets(self)
+
+
+def stage1_targets(shape) -> int:
+    """Static number of LOCAL_SPAWN targets per ARRIVE (Sec 4.1)."""
+    return int(min(shape.k, max(1, -(-shape.n_childs // shape.mpk))))
 
 
 class SimKnobs(NamedTuple):
@@ -88,15 +119,17 @@ class SimKnobs(NamedTuple):
     dn_th: jnp.ndarray           # i32, beacon drift threshold
     T_b: jnp.ndarray             # f32, beacon period/deadline (periodic,
                                  #      hybrid, staleness_weighted)
+    c_hop: jnp.ndarray           # f32, per-hop mesh latency (mesh2d)
 
     @classmethod
     def make(cls, c_b=8.0, c_s=8.0, c_join=8.0, dn_th=4,
-             T_b=1000.0) -> "SimKnobs":
+             T_b=1000.0, c_hop=2.0) -> "SimKnobs":
         return cls(jnp.asarray(c_b, jnp.float32),
                    jnp.asarray(c_s, jnp.float32),
                    jnp.asarray(c_join, jnp.float32),
                    jnp.asarray(dn_th, jnp.int32),
-                   jnp.asarray(T_b, jnp.float32))
+                   jnp.asarray(T_b, jnp.float32),
+                   jnp.asarray(c_hop, jnp.float32))
 
 
 @dataclass(frozen=True)
@@ -111,8 +144,11 @@ class SimParams:
     queue_cap: int = 2048
     max_apps: int = 512
     T_b: float = 1000.0          # beacon period/deadline (traced knob)
+    c_hop: float = 2.0           # per-hop mesh latency (traced knob)
     mapping: str = "min_search"  # stage-1 policy (static, core/policies.py)
     beacon: str = "threshold"    # beacon policy (static, core/policies.py)
+    topology: str = "ideal"      # fabric model (static, core/transport.py)
+    record_s1: bool = False      # record stage-1 decision traces (replay)
 
     @property
     def mpk(self) -> int:
@@ -121,16 +157,21 @@ class SimParams:
     @property
     def shape(self) -> SimShape:
         return SimShape(m=self.m, k=self.k, n_childs=self.n_childs,
-                        queue_cap=self.queue_cap, max_apps=self.max_apps)
+                        queue_cap=self.queue_cap, max_apps=self.max_apps,
+                        record_s1=self.record_s1)
 
     @property
     def knobs(self) -> SimKnobs:
         return SimKnobs.make(c_b=self.c_b, c_s=self.c_s, c_join=self.c_join,
-                             dn_th=self.dn_th, T_b=self.T_b)
+                             dn_th=self.dn_th, T_b=self.T_b, c_hop=self.c_hop)
 
     @property
     def policy(self) -> SimPolicy:
         return SimPolicy(mapping=self.mapping, beacon=self.beacon)
+
+    @property
+    def topo(self) -> Topology:
+        return Topology(kind=self.topology)
 
     @property
     def sel_global(self) -> float:
@@ -151,15 +192,17 @@ def _log2_levels(v: int) -> float:
 
 
 class _Ctx:
-    """Per-trace context: static shape ints + policy + traced knob scalars,
-    presented through the attribute names the event handlers historically
-    used."""
+    """Per-trace context: static shape ints + policy + topology + traced
+    knob scalars, presented through the attribute names the event handlers
+    historically used."""
     __slots__ = ("m", "k", "mpk", "n_childs", "queue_cap", "max_apps",
-                 "c_b", "c_s", "c_join", "dn_th", "T_b", "policy",
+                 "c_b", "c_s", "c_join", "dn_th", "T_b", "c_hop", "policy",
+                 "topology", "hops", "ns", "record_s1",
                  "sel_global", "sel_local")
 
     def __init__(self, shape: SimShape, knobs: SimKnobs,
-                 policy: SimPolicy = DEFAULT_POLICY):
+                 policy: SimPolicy = DEFAULT_POLICY,
+                 topology: Topology = DEFAULT_TOPOLOGY):
         self.m = shape.m
         self.k = shape.k
         self.mpk = shape.mpk
@@ -171,7 +214,13 @@ class _Ctx:
         self.c_join = knobs.c_join
         self.dn_th = knobs.dn_th
         self.T_b = knobs.T_b
+        self.c_hop = knobs.c_hop
         self.policy = policy
+        self.topology = topology
+        # static Manhattan hop table (XLA constant; only mesh2d reads it)
+        self.hops = jnp.asarray(T.mesh_hops(shape.k))
+        self.ns = shape.ns
+        self.record_s1 = shape.record_s1
         self.sel_global = knobs.c_s * _log2_levels(shape.k)
         self.sel_local = knobs.c_s * _log2_levels(shape.mpk)
 
@@ -196,13 +245,39 @@ def make_state(p):
         "last_bcast_t": jnp.zeros((k,), jnp.float32),
         "rr_ptr": jnp.zeros((k,), jnp.int32),      # per-GMN decision counter
         "beacons_tx": jnp.zeros((), jnp.int32),
+        # transport: in-flight beacon matrix [src, rcv] tracking the
+        # LATEST pending arrival per pair (non-ideal topologies; stays
+        # INF under "ideal") + the delivery counter — conservation is
+        # exact: beacons_rx == (k-1) * beacons_tx at the end of a run
+        "bcn_t": jnp.full((k, k), INF),            # arrival time (INF = none)
+        "beacons_rx": jnp.zeros((), jnp.int32),    # per-receiver deliveries
+        # per-receiver delivery skew of each fired beacon (max - min
+        # arrival): the heterogeneity the ideal fabric hides
+        "bcn_skew_sum": jnp.zeros((), jnp.float32),
+        "bcn_skew_max": jnp.zeros((), jnp.float32),
+        # management accounting (benchmarks/topology_frontier.py):
+        # mgmt_latency sums (delivery - ready) over transported messages —
+        # the pure communication overhead, broken out per fabric;
+        # mgmt_proc sums manager-side queueing + service (fork expansion,
+        # stage-2 decision batches, barrier decrements) — the computation
+        # overhead that saturates a centralized manager
+        "mgmt_msgs": jnp.zeros((), jnp.int32),
+        "mgmt_latency": jnp.zeros((), jnp.float32),
+        "mgmt_proc": jnp.zeros((), jnp.float32),
         # applications
         "app_remaining": jnp.zeros((A,), jnp.int32),
         "app_arrive": jnp.full((A,), INF),
         "app_done": jnp.full((A,), INF),
         "events_processed": jnp.zeros((), jnp.int32),
         "dropped": jnp.zeros((), jnp.int32),
-    }
+    } | ({
+        # stage-1 decision trace (serving/replay.py cross-validation)
+        "dec_view": jnp.zeros((A, p.ns, k), jnp.int32),
+        "dec_age": jnp.zeros((A, k), jnp.float32),
+        "dec_choice": jnp.zeros((A, p.ns), jnp.int32),
+        "dec_rr0": jnp.zeros((A,), jnp.int32),
+        "dec_t": jnp.full((A,), INF),
+    } if p.record_s1 else {})
 
 
 # Dynamic-index updates are written as one-hot selects rather than
@@ -212,10 +287,8 @@ def make_state(p):
 # (no arithmetic on unselected elements), which keeps sweep results bitwise
 # equal to per-config runs (tests/test_sweep.py).
 
-def _set1(arr, i, val):
-    """arr.at[i].set(val) as a one-hot select (row update for ndim > 1)."""
-    hot = jnp.arange(arr.shape[0]) == i
-    return jnp.where(hot.reshape((-1,) + (1,) * (arr.ndim - 1)), val, arr)
+# the scatter-free row-set primitive lives once, in transport.py
+_set1 = T._set1
 
 
 def _setcol(arr, j, val):
@@ -233,6 +306,13 @@ def _add2(arr, i, j, delta):
     hot = (jnp.arange(arr.shape[0])[:, None] == i) \
         & (jnp.arange(arr.shape[1])[None, :] == j)
     return jnp.where(hot, arr + delta, arr)
+
+
+def _set2(arr, i, j, val):
+    """arr.at[i, j].set(val) as a one-hot select."""
+    hot = (jnp.arange(arr.shape[0])[:, None] == i) \
+        & (jnp.arange(arr.shape[1])[None, :] == j)
+    return jnp.where(hot, val, arr)
 
 
 def _bulk_push(st, mask, times, typ, a0, a1, a2):
@@ -261,31 +341,96 @@ def _bulk_push(st, mask, times, typ, a0, a1, a2):
 def _maybe_beacon(st, p, g, t):
     """Status broadcast check (Sec 4.2, generalized).  The trigger is the
     statically selected BeaconPolicy (core/policies.py); ``threshold`` is
-    the paper's drift rule, and the `k > 1` gate is topology, not policy."""
+    the paper's drift rule, and the `k > 1` gate is topology, not policy.
+
+    Delivery is the statically selected Topology (core/transport.py):
+    ``ideal`` updates every receiver's view atomically at the global-bus
+    grant (the historical behavior, kept operation-for-operation for the
+    bitwise golden tests); the non-ideal fabrics enqueue k-1 in-flight
+    entries with per-receiver arrival times and deliver via BEACON_RX."""
     load_g = st["loads"][g].sum()
     delta = jnp.abs(load_g - st["last_bcast"][g])
     due = P.beacon_policy(p.policy.beacon)(
         delta, t, st["last_bcast_t"][g], dn_th=p.dn_th, T_b=p.T_b)
     fire = jnp.logical_and(due, p.k > 1)
-    # bus grant: serialize on the global bus
-    t_tx = jnp.maximum(t, st["gbus_free"]) + p.c_b
     st = dict(st)
-    st["gbus_free"] = jnp.where(fire, t_tx, st["gbus_free"])
-    st["view"] = jnp.where(fire, _setcol(st["view"], g, load_g), st["view"])
-    st["view_t"] = jnp.where(fire, _setcol(st["view_t"], g, t_tx),
+    if p.topology.kind == "ideal":
+        # bus grant: serialize on the global bus; atomic view update
+        t_tx = jnp.maximum(t, st["gbus_free"]) + p.c_b
+        st["gbus_free"] = jnp.where(fire, t_tx, st["gbus_free"])
+        st["view"] = jnp.where(fire, _setcol(st["view"], g, load_g),
+                               st["view"])
+        st["view_t"] = jnp.where(fire, _setcol(st["view_t"], g, t_tx),
+                                 st["view_t"])
+        st["last_bcast"] = jnp.where(fire, _set1(st["last_bcast"], g, load_g),
+                                     st["last_bcast"])
+        st["last_bcast_t"] = jnp.where(fire,
+                                       _set1(st["last_bcast_t"], g, t_tx),
+                                       st["last_bcast_t"])
+        st["beacons_tx"] = st["beacons_tx"] + jnp.where(fire, 1, 0)
+        nrcv = jnp.int32(p.k - 1)
+        st["mgmt_msgs"] = st["mgmt_msgs"] + jnp.where(fire, nrcv, 0)
+        st["mgmt_latency"] = st["mgmt_latency"] \
+            + jnp.where(fire, nrcv.astype(jnp.float32) * (t_tx - t), 0.0)
+        return st
+
+    # transport path: per-receiver delivery through the fabric
+    t_tx, t_arr, gbus, lbus = T.beacon_tx(
+        p.topology, g, t, fire, gbus=st["gbus_free"], lbus=st["lbus_free"],
+        c_b=p.c_b, c_hop=p.c_hop, hops=p.hops, k=p.k)
+    st["gbus_free"], st["lbus_free"] = gbus, lbus
+    rcv = jnp.arange(p.k) != g                     # receiver mask
+    push = jnp.logical_and(fire, rcv)
+    # track the latest pending arrival per (src, rcv); arrivals from one
+    # source to one receiver are strictly increasing in send order
+    # (c_b > 0 serializes the source), so earlier beacons still in the
+    # event queue deliver first and the matrix drains on the last one
+    row_t = jnp.where(rcv, t_arr, st["bcn_t"][g])
+    st["bcn_t"] = jnp.where(fire, _set1(st["bcn_t"], g, row_t), st["bcn_t"])
+    # the sender's own entry is bookkeeping, not a message: exact at tx
+    st["view"] = jnp.where(fire, _set2(st["view"], g, g, load_g), st["view"])
+    st["view_t"] = jnp.where(fire, _set2(st["view_t"], g, g, t_tx),
                              st["view_t"])
     st["last_bcast"] = jnp.where(fire, _set1(st["last_bcast"], g, load_g),
                                  st["last_bcast"])
     st["last_bcast_t"] = jnp.where(fire, _set1(st["last_bcast_t"], g, t_tx),
                                    st["last_bcast_t"])
     st["beacons_tx"] = st["beacons_tx"] + jnp.where(fire, 1, 0)
+    st["mgmt_msgs"] = st["mgmt_msgs"] + jnp.sum(push).astype(jnp.int32)
+    st["mgmt_latency"] = st["mgmt_latency"] \
+        + jnp.sum(jnp.where(push, t_arr - t, 0.0))
+    spread = jnp.maximum(jnp.max(jnp.where(rcv, t_arr, -INF))
+                         - jnp.min(jnp.where(rcv, t_arr, INF)), 0.0)
+    st["bcn_skew_sum"] = st["bcn_skew_sum"] + jnp.where(fire, spread, 0.0)
+    st["bcn_skew_max"] = jnp.maximum(st["bcn_skew_max"],
+                                     jnp.where(fire, spread, 0.0))
+    return _bulk_push(st, push, t_arr, EV_BEACON_RX,
+                      jnp.full((p.k,), g), jnp.arange(p.k),
+                      jnp.full((p.k,), load_g))
+
+
+def _handle_beacon_rx(st, p, t, src, rcv, load):
+    """A beacon from GMN src reaches receiver rcv (non-ideal topologies).
+    Every delivery applies: per-pair arrivals are strictly increasing in
+    send order (c_b > 0 serializes the source), so applying each event's
+    payload at its own arrival time is FIFO-correct even when a newer
+    beacon from src is already in flight behind it.  The in-flight
+    matrix clears only when the LAST tracked arrival lands (`bcn_t == t`),
+    which is what lets tests assert it drains to empty."""
+    last = st["bcn_t"][src, rcv] == t
+    st = dict(st)
+    st["bcn_t"] = jnp.where(last, _set2(st["bcn_t"], src, rcv, INF),
+                            st["bcn_t"])
+    st["view"] = _set2(st["view"], rcv, src, load)
+    st["view_t"] = _set2(st["view_t"], rcv, src, t)
+    st["beacons_rx"] = st["beacons_rx"] + 1
     return st
 
 
 def _handle_arrive(st, p, t, app, g, _unused, lengths):
     """Stage 1: expand the fork tree at GMN g, fan out LOCAL_SPAWN msgs."""
     k, n = p.k, p.n_childs
-    ns = int(min(k, max(1, -(-n // p.mpk))))      # cluster targets (static)
+    ns = p.ns                                     # cluster targets (static)
     depth = int(np.ceil(np.log2(ns))) if ns > 1 else 0
     share = n // ns
     rem = n - share * ns
@@ -305,27 +450,43 @@ def _handle_arrive(st, p, t, app, g, _unused, lengths):
     # (core/policies.py); min_search reproduces the historical inline rule
     # bitwise (min over the view, ties from the GMN's own index)
     pick_cluster = P.mapping_policy(p.policy.mapping)
+    rr0 = st["rr_ptr"][g]
 
     def pick(carry, i):
-        view, st_gbus, rr = carry
+        view, st_gbus, st_lbus, rr = carry
         c = pick_cluster(view, age, g, rr, app, i, k=p.k, T_b=p.T_b)
         cnt = share + jnp.where(i < rem, 1, 0)
-        view = _add1(view, c, cnt)                 # optimistic local bookkeeping
-        # task-start message over the global bus (serialized, c_b each);
-        # a self-targeted spawn skips the bus
+        new_view = _add1(view, c, cnt)             # optimistic local bookkeeping
+        # task-start message through the fabric (core/transport.py); a
+        # self-targeted spawn is a local operation and skips it entirely
         is_remote = c != g
-        t_bus = jnp.maximum(t_tree, st_gbus) + p.c_b
-        st_gbus = jnp.where(is_remote, t_bus, st_gbus)
-        t_arr = jnp.where(is_remote, t_bus, t_tree)
-        return (view, st_gbus, rr + 1), (c, cnt, t_arr)
+        t_arr, st_gbus, st_lbus, lat = T.unicast(
+            p.topology, g, c, t_tree, is_remote, gbus=st_gbus, lbus=st_lbus,
+            c_b=p.c_b, c_hop=p.c_hop, hops=p.hops)
+        return (new_view, st_gbus, st_lbus, rr + 1), \
+            (c, cnt, t_arr, lat, is_remote, view)
 
-    (new_view, gbus, rr_out), (cs, cnts, t_arrs) = jax.lax.scan(
-        pick, (own_view, st["gbus_free"], st["rr_ptr"][g]), jnp.arange(ns))
+    (new_view, gbus, lbus, rr_out), (cs, cnts, t_arrs, lats, remotes, views) \
+        = jax.lax.scan(pick, (own_view, st["gbus_free"], st["lbus_free"],
+                              rr0), jnp.arange(ns))
     st["view"] = _set1(st["view"], g, new_view)
     st["rr_ptr"] = _set1(st["rr_ptr"], g, rr_out)
     st["gbus_free"] = gbus
+    st["lbus_free"] = lbus
+    st["mgmt_msgs"] = st["mgmt_msgs"] + jnp.sum(remotes).astype(jnp.int32)
+    st["mgmt_latency"] = st["mgmt_latency"] + jnp.sum(lats)
+    st["mgmt_proc"] = st["mgmt_proc"] + (t_tree - t)
     st["app_remaining"] = _set1(st["app_remaining"], app, n)
     st["app_arrive"] = _set1(st["app_arrive"], app, t)
+    if p.record_s1:
+        # per-decision inputs/outputs for serving/replay.py: the (possibly
+        # stale) view each decision saw, the shared age vector, the chosen
+        # cluster, and the round-robin pointer before the fork
+        st["dec_view"] = _set1(st["dec_view"], app, views)
+        st["dec_age"] = _set1(st["dec_age"], app, age)
+        st["dec_choice"] = _set1(st["dec_choice"], app, cs)
+        st["dec_rr0"] = _set1(st["dec_rr0"], app, rr0)
+        st["dec_t"] = _set1(st["dec_t"], app, t)
 
     return _bulk_push(st, jnp.ones((ns,), bool), t_arrs, EV_LOCAL_SPAWN,
                       jnp.full((ns,), app), cs, cnts)
@@ -334,41 +495,52 @@ def _handle_arrive(st, p, t, app, g, _unused, lengths):
 def _spawn_group_bound(p) -> int:
     """Static upper bound on childs per LOCAL_SPAWN group: _handle_arrive
     hands each of its ns targets share or share+1 childs."""
-    k, n = p.k, p.n_childs
-    ns = int(min(k, max(1, -(-n // p.mpk))))
+    n, ns = p.n_childs, p.ns
     share = n // ns
-    return min(p.n_childs, share + (1 if n - share * ns > 0 else 0))
+    return min(n, share + (1 if n - share * ns > 0 else 0))
 
 
 def _handle_local_spawn(st, p, t, app, g, cnt, lengths):
-    """Stage 2: GMN g maps cnt childs onto its PEs (exact local view)."""
+    """Stage 2: GMN g maps cnt childs onto its PEs (exact local view).
+    Intra-cluster task-starts ride the cluster's local bus — except under
+    the ``shared_bus`` topology, where every management message contends
+    on the single flat bus."""
     mpk = p.mpk
     n_max = _spawn_group_bound(p)   # static; cnt <= n_max always
+    shared = p.topology.kind == "shared_bus"
     st = dict(st)
 
     def spawn(carry, i):
-        t_cpu, lbus, pe_free, loads = carry
+        t_cpu, bus, pe_free, loads = carry
         active = i < cnt
         t_cpu = t_cpu + jnp.where(active, p.sel_local, 0.0)
         pe = jnp.argmin(loads)                     # stage-2 min-search
-        # task-start over the local bus
-        t_msg = jnp.maximum(t_cpu, lbus) + p.c_b
-        lbus = jnp.where(active, t_msg, lbus)
+        # task-start over the (local or shared) bus
+        t_msg = jnp.maximum(t_cpu, bus) + p.c_b
+        bus = jnp.where(active, t_msg, bus)
         start = jnp.maximum(t_msg, pe_free[pe])
         ln = lengths[app, i]
         finish = start + ln
         pe_free = jnp.where(active, _set1(pe_free, pe, finish), pe_free)
         loads = jnp.where(active, _add1(loads, pe, 1), loads)
-        return (t_cpu, lbus, pe_free, loads), (pe, finish, active)
+        return (t_cpu, bus, pe_free, loads), \
+            (pe, finish, active, jnp.where(active, t_msg - t_cpu, 0.0))
 
     t0 = jnp.maximum(t, st["gmn_free"][g])
-    (t_cpu, lbus, pe_free, loads), (pes, finishes, actives) = jax.lax.scan(
-        spawn, (t0, st["lbus_free"][g], st["pe_free"][g], st["loads"][g]),
-        jnp.arange(n_max))
+    bus0 = st["gbus_free"] if shared else st["lbus_free"][g]
+    (t_cpu, bus, pe_free, loads), (pes, finishes, actives, lats) = \
+        jax.lax.scan(spawn, (t0, bus0, st["pe_free"][g], st["loads"][g]),
+                     jnp.arange(n_max))
     st["gmn_free"] = _set1(st["gmn_free"], g, t_cpu)
-    st["lbus_free"] = _set1(st["lbus_free"], g, lbus)
+    if shared:
+        st["gbus_free"] = bus
+    else:
+        st["lbus_free"] = _set1(st["lbus_free"], g, bus)
     st["pe_free"] = _set1(st["pe_free"], g, pe_free)
     st["loads"] = _set1(st["loads"], g, loads)
+    st["mgmt_msgs"] = st["mgmt_msgs"] + jnp.sum(actives).astype(jnp.int32)
+    st["mgmt_latency"] = st["mgmt_latency"] + jnp.sum(lats)
+    st["mgmt_proc"] = st["mgmt_proc"] + (t_cpu - t)
 
     st = _maybe_beacon(st, p, g, t_cpu)
 
@@ -378,19 +550,31 @@ def _handle_local_spawn(st, p, t, app, g, cnt, lengths):
 
 def _handle_join_exit(st, p, t, app, g, pe, lengths, parent_gmns):
     st = dict(st)
-    # join-exit message over the local bus of the child's cluster
-    t_msg = jnp.maximum(t, st["lbus_free"][g]) + p.c_b
-    st["lbus_free"] = _set1(st["lbus_free"], g, t_msg)
+    shared = p.topology.kind == "shared_bus"
+    # join-exit message over the bus of the child's cluster (the single
+    # shared bus under shared_bus)
+    if shared:
+        t_msg = jnp.maximum(t, st["gbus_free"]) + p.c_b
+        st["gbus_free"] = t_msg
+    else:
+        t_msg = jnp.maximum(t, st["lbus_free"][g]) + p.c_b
+        st["lbus_free"] = _set1(st["lbus_free"], g, t_msg)
     st["loads"] = _add2(st["loads"], g, pe, -1)
+    st["mgmt_msgs"] = st["mgmt_msgs"] + 1
+    st["mgmt_latency"] = st["mgmt_latency"] + (t_msg - t)
     st = _maybe_beacon(st, p, g, t_msg)
     # the join barrier lives at the application's arrival GMN: remote
-    # join-exits forward over the global bus (Tab 2 / Sec 4)
+    # join-exits forward through the fabric (Tab 2 / Sec 4)
     pg = parent_gmns[app]
     remote = pg != g
-    t_fwd = jnp.where(remote,
-                      jnp.maximum(t_msg, st["gbus_free"]) + p.c_b, t_msg)
-    st["gbus_free"] = jnp.where(remote, t_fwd, st["gbus_free"])
+    t_fwd, gbus, lbus, lat = T.forward(
+        p.topology, g, pg, t_msg, remote, gbus=st["gbus_free"],
+        lbus=st["lbus_free"], c_b=p.c_b, c_hop=p.c_hop, hops=p.hops)
+    st["gbus_free"], st["lbus_free"] = gbus, lbus
+    st["mgmt_msgs"] = st["mgmt_msgs"] + jnp.where(remote, 1, 0)
+    st["mgmt_latency"] = st["mgmt_latency"] + lat
     t_bar = jnp.maximum(t_fwd, st["gmn_free"][pg]) + p.c_join
+    st["mgmt_proc"] = st["mgmt_proc"] + (t_bar - t_fwd)
     st["gmn_free"] = _set1(st["gmn_free"], pg, t_bar)
     rem = st["app_remaining"][app] - 1
     st["app_remaining"] = _set1(st["app_remaining"], app, rem)
@@ -400,11 +584,13 @@ def _handle_join_exit(st, p, t, app, g, pe, lengths, parent_gmns):
 
 
 def simulate(shape: SimShape, knobs: SimKnobs, arrivals, arrival_gmns,
-             lengths, sim_len, policy: SimPolicy = DEFAULT_POLICY):
-    """Traceable core: static ``shape`` and ``policy``, traced everything
-    else.  This is what ``repro.core.sweep`` vmaps over knob/workload
-    batches (one XLA program per (shape, policy) pair)."""
-    p = _Ctx(shape, knobs, policy)
+             lengths, sim_len, policy: SimPolicy = DEFAULT_POLICY,
+             topology: Topology = DEFAULT_TOPOLOGY):
+    """Traceable core: static ``shape``, ``policy`` and ``topology``,
+    traced everything else.  This is what ``repro.core.sweep`` vmaps over
+    knob/workload batches (one XLA program per (shape, policy, topology)
+    triple)."""
+    p = _Ctx(shape, knobs, policy, topology)
     st = make_state(p)
 
     n_apps = arrivals.shape[0]
@@ -415,6 +601,21 @@ def simulate(shape: SimShape, knobs: SimKnobs, arrivals, arrival_gmns,
     def cond(st):
         return st["ev_time"].min() < INF
 
+    branches = [
+        lambda s, t, a: _handle_arrive(s, p, t, a[0], a[1], a[2], lengths),
+        lambda s, t, a: _handle_local_spawn(s, p, t, a[0], a[1], a[2],
+                                            lengths),
+        lambda s, t, a: _handle_join_exit(s, p, t, a[0], a[1], a[2], lengths,
+                                          arrival_gmns),
+    ]
+    if topology.kind != "ideal":
+        # BEACON_RX exists only on the non-ideal fabrics; the ideal
+        # program keeps its historical 3-branch switch (under vmap every
+        # branch executes each step, so the extra branch must not tax the
+        # golden configuration)
+        branches.append(
+            lambda s, t, a: _handle_beacon_rx(s, p, t, a[0], a[1], a[2]))
+
     def body(st):
         slot = jnp.argmin(st["ev_time"])
         t = st["ev_time"][slot]
@@ -423,19 +624,14 @@ def simulate(shape: SimShape, knobs: SimKnobs, arrivals, arrival_gmns,
         st = dict(st)
         st["ev_time"] = _set1(st["ev_time"], slot, INF)   # recycle slot
         st["events_processed"] = st["events_processed"] + 1
-        st = jax.lax.switch(
-            typ,
-            [lambda s: _handle_arrive(s, p, t, a[0], a[1], a[2], lengths),
-             lambda s: _handle_local_spawn(s, p, t, a[0], a[1], a[2], lengths),
-             lambda s: _handle_join_exit(s, p, t, a[0], a[1], a[2], lengths,
-                                         arrival_gmns)],
-            st)
+        st = jax.lax.switch(typ, [lambda s, b=b: b(s, t, a)
+                                  for b in branches], st)
         return st
 
     return jax.lax.while_loop(cond, body, st)
 
 
-_run = jax.jit(simulate, static_argnums=(0, 6))
+_run = jax.jit(simulate, static_argnums=(0, 6, 7))
 
 
 def run(p: SimParams, arrivals, arrival_gmns, lengths, sim_len: float = 1e7):
@@ -443,20 +639,20 @@ def run(p: SimParams, arrivals, arrival_gmns, lengths, sim_len: float = 1e7):
     lengths (A, n_childs) f32 child task lengths.
 
     Returns final state dict (response times = app_done - app_arrive).
-    Compiles once per ``(p.shape, p.policy)``; the numeric knobs (c_b,
-    c_s, c_join, dn_th, T_b) and sim_len are traced, so threshold/cost/
-    period sweeps re-use the compiled program.
+    Compiles once per ``(p.shape, p.policy, p.topo)``; the numeric knobs
+    (c_b, c_s, c_join, dn_th, T_b, c_hop) and sim_len are traced, so
+    threshold/cost/period sweeps re-use the compiled program.
     """
     return _run(p.shape, p.knobs,
                 jnp.asarray(arrivals, jnp.float32),
                 jnp.asarray(arrival_gmns, jnp.int32),
                 jnp.asarray(lengths, jnp.float32),
-                jnp.float32(sim_len), p.policy)
+                jnp.float32(sim_len), p.policy, p.topo)
 
 
 def compile_cache_size() -> int:
     """Number of XLA programs compiled for ``run`` (one per
-    (SimShape, SimPolicy) pair).
+    (SimShape, SimPolicy, Topology) triple).
     Relies on jit's private cache introspection; returns 0 if a future
     JAX drops it (degrading compile-count reporting, not simulation)."""
     counter = getattr(_run, "_cache_size", None)

@@ -37,10 +37,12 @@ import numpy as np
 from repro.core.policies import DEFAULT_POLICY, SimPolicy, policy_grid
 from repro.core.sim import (SimKnobs, SimParams, SimShape, _run,
                             compile_cache_size, simulate)
+from repro.core.transport import DEFAULT_TOPOLOGY, Topology, topology_grid
 
 __all__ = ["knob_batch", "knob_product", "sweep", "sweep_policies",
-           "policy_grid", "cache_size", "response_times", "speedup",
-           "mean_response", "beacons"]
+           "sweep_topologies", "policy_grid", "topology_grid", "cache_size",
+           "response_times", "speedup", "mean_response", "beacons",
+           "beacons_rx", "mgmt_msgs", "mgmt_latency", "mgmt_proc"]
 
 
 def _as_shape(p) -> SimShape:
@@ -48,11 +50,11 @@ def _as_shape(p) -> SimShape:
 
 
 def knob_batch(*, c_b=8.0, c_s=8.0, c_join=8.0, dn_th=4,
-               T_b=1000.0) -> SimKnobs:
+               T_b=1000.0, c_hop=2.0) -> SimKnobs:
     """Build a batch of B knob configs.  Each argument is a scalar
     (broadcast) or a length-B sequence; sequences must agree on B."""
     vals = {"c_b": c_b, "c_s": c_s, "c_join": c_join, "dn_th": dn_th,
-            "T_b": T_b}
+            "T_b": T_b, "c_hop": c_hop}
     sizes = {name: len(v) for name, v in vals.items()
              if np.ndim(v) == 1}
     if len(set(sizes.values())) > 1:
@@ -65,39 +67,44 @@ def knob_batch(*, c_b=8.0, c_s=8.0, c_join=8.0, dn_th=4,
                     c_s=col(vals["c_s"], np.float32),
                     c_join=col(vals["c_join"], np.float32),
                     dn_th=col(vals["dn_th"], np.int32),
-                    T_b=col(vals["T_b"], np.float32))
+                    T_b=col(vals["T_b"], np.float32),
+                    c_hop=col(vals["c_hop"], np.float32))
 
 
 def knob_product(*, c_b=(8.0,), c_s=(8.0,), c_join=(8.0,), dn_th=(4,),
-                 T_b=(1000.0,)) -> SimKnobs:
+                 T_b=(1000.0,), c_hop=(2.0,)) -> SimKnobs:
     """Cartesian product of knob axes, flattened to one batch axis in
-    ``itertools.product`` order (c_b outermost, T_b innermost)."""
+    ``itertools.product`` order (c_b outermost, c_hop innermost)."""
     rows = list(itertools.product(np.atleast_1d(c_b), np.atleast_1d(c_s),
                                   np.atleast_1d(c_join),
-                                  np.atleast_1d(dn_th), np.atleast_1d(T_b)))
-    cb, cs, cj, th, tb = (np.asarray(col) for col in zip(*rows))
+                                  np.atleast_1d(dn_th), np.atleast_1d(T_b),
+                                  np.atleast_1d(c_hop)))
+    cb, cs, cj, th, tb, ch = (np.asarray(col) for col in zip(*rows))
     return SimKnobs(c_b=jnp.asarray(cb, jnp.float32),
                     c_s=jnp.asarray(cs, jnp.float32),
                     c_join=jnp.asarray(cj, jnp.float32),
                     dn_th=jnp.asarray(th, jnp.int32),
-                    T_b=jnp.asarray(tb, jnp.float32))
+                    T_b=jnp.asarray(tb, jnp.float32),
+                    c_hop=jnp.asarray(ch, jnp.float32))
 
 
-@functools.partial(jax.jit, static_argnums=(0, 6))
+@functools.partial(jax.jit, static_argnums=(0, 6, 7))
 def _sweep(shape, knobs, arrivals, gmns, lengths, sim_len,
-           policy=DEFAULT_POLICY):
+           policy=DEFAULT_POLICY, topology=DEFAULT_TOPOLOGY):
     def per_workload(a, g, l):
         return jax.vmap(
-            lambda kn: simulate(shape, kn, a, g, l, sim_len, policy))(knobs)
+            lambda kn: simulate(shape, kn, a, g, l, sim_len, policy,
+                                topology))(knobs)
     # out_axes=1: knob-config axis stays leading, workload axis second
     return jax.vmap(per_workload, in_axes=0, out_axes=1)(
         arrivals, gmns, lengths)
 
 
 def sweep(shape, knobs: SimKnobs, workload, sim_len: float = 1e7,
-          mode: str = "auto", policy: SimPolicy = DEFAULT_POLICY):
+          mode: str = "auto", policy: SimPolicy = DEFAULT_POLICY,
+          topology: Topology = DEFAULT_TOPOLOGY):
     """Run B knob configs x S workloads with one compilation per
-    (shape, policy).
+    (shape, policy, topology).
 
     shape     SimShape (or SimParams, whose .shape is taken).
     knobs     SimKnobs with leading axis (B,) — see knob_batch/knob_product.
@@ -106,15 +113,19 @@ def sweep(shape, knobs: SimKnobs, workload, sim_len: float = 1e7,
     policy    SimPolicy (mapping x beacon, core/policies.py).  Static —
               every combination is its own XLA program; sweep the policy
               axis with :func:`sweep_policies`.
+    topology  Topology (fabric model, core/transport.py).  Also static —
+              sweep the fabric axis with :func:`sweep_topologies`; the
+              numeric transport knobs (c_b, c_hop) stay traced.
     mode      execution strategy; results are bitwise identical across
               modes (tests/test_sweep.py):
               - "vmap": the whole grid is ONE batched XLA program (one
-                compile per (shape, policy, B, S)).  Wins on accelerators
-                where lanes vectorize; on CPU the batched while-loop pays
-                for every event handler in every lane each step.
+                compile per (shape, policy, topology, B, S)).  Wins on
+                accelerators where lanes vectorize; on CPU the batched
+                while-loop pays for every event handler in every lane
+                each step.
               - "seq": warm re-runs of the single-config program (one
-                compile per (shape, policy), zero recompiles across the
-                grid) — the fast path on CPU.
+                compile per (shape, policy, topology), zero recompiles
+                across the grid) — the fast path on CPU.
               - "auto" (default): "seq" on CPU, "vmap" elsewhere.
 
     Returns the final-state dict with every leaf batched to (B, S, ...).
@@ -130,17 +141,19 @@ def sweep(shape, knobs: SimKnobs, workload, sim_len: float = 1e7,
     if knobs.dn_th.ndim != 1:
         raise ValueError("knobs need a leading batch axis (B,); "
                          "use knob_batch/knob_product")
+    if isinstance(topology, str):
+        topology = Topology(topology)
     if mode == "auto":
         mode = "seq" if jax.default_backend() == "cpu" else "vmap"
     if mode == "vmap":
         return _sweep(shape, knobs, arrivals, gmns, lengths,
-                      jnp.float32(sim_len), policy)
+                      jnp.float32(sim_len), policy, topology)
     if mode != "seq":
         raise ValueError(f"unknown sweep mode: {mode!r}")
     b, s = knobs.dn_th.shape[0], arrivals.shape[0]
     sl = jnp.float32(sim_len)
     outs = [_run(shape, SimKnobs(*(leaf[i] for leaf in knobs)),
-                 arrivals[j], gmns[j], lengths[j], sl, policy)
+                 arrivals[j], gmns[j], lengths[j], sl, policy, topology)
             for i in range(b) for j in range(s)]
     return jax.tree.map(
         lambda *leaves: jnp.stack(leaves).reshape((b, s) + leaves[0].shape),
@@ -148,7 +161,8 @@ def sweep(shape, knobs: SimKnobs, workload, sim_len: float = 1e7,
 
 
 def sweep_policies(shape, knobs: SimKnobs, workload, policies=None,
-                   sim_len: float = 1e7, mode: str = "auto") -> dict:
+                   sim_len: float = 1e7, mode: str = "auto",
+                   topology: Topology = DEFAULT_TOPOLOGY) -> dict:
     """The policy axis of the design space: run the (B x S) knob/workload
     grid once per (mapping, beacon) combination.
 
@@ -161,8 +175,31 @@ def sweep_policies(shape, knobs: SimKnobs, workload, policies=None,
     if policies is None:
         policies = policy_grid()
     return {(pol.mapping, pol.beacon):
-            sweep(shape, knobs, workload, sim_len, mode, policy=pol)
+            sweep(shape, knobs, workload, sim_len, mode, policy=pol,
+                  topology=topology)
             for pol in policies}
+
+
+def sweep_topologies(shape, knobs: SimKnobs, workload, topologies=None,
+                     sim_len: float = 1e7, mode: str = "auto",
+                     policy: SimPolicy = DEFAULT_POLICY) -> dict:
+    """The fabric axis of the design space: run the (B x S) knob/workload
+    grid once per interconnect topology (DESIGN.md §10).
+
+    ``topologies`` is an iterable of Topology values or kind strings
+    (default: the full ``topology_grid()``).  Topologies are static, so
+    each fabric costs one compilation; the knob/workload grid inside
+    each is free.
+
+    Returns {kind: state dict with (B, S, ...) leaves}.
+    """
+    if topologies is None:
+        topologies = topology_grid()
+    topologies = [Topology(tp) if isinstance(tp, str) else tp
+                  for tp in topologies]
+    return {tp.kind: sweep(shape, knobs, workload, sim_len, mode,
+                           policy=policy, topology=tp)
+            for tp in topologies}
 
 
 def cache_size() -> int:
@@ -212,3 +249,28 @@ def mean_response(state):
 def beacons(state):
     """Transmitted status beacons: (B, S) int64."""
     return np.asarray(state["beacons_tx"]).astype(np.int64)
+
+
+def beacons_rx(state):
+    """Per-receiver beacon deliveries (non-ideal topologies): (B, S)."""
+    return np.asarray(state["beacons_rx"]).astype(np.int64)
+
+
+def mgmt_msgs(state):
+    """Management messages transported (task-starts, join-exits and
+    forwards, beacon deliveries): (B, S) int64."""
+    return np.asarray(state["mgmt_msgs"]).astype(np.int64)
+
+
+def mgmt_latency(state):
+    """Total management-message latency in ticks — the sum of
+    (delivery - ready) over every transported message, i.e. the
+    communication overhead of the management plane: (B, S) float64."""
+    return np.asarray(state["mgmt_latency"]).astype(np.float64)
+
+
+def mgmt_proc(state):
+    """Total manager-side queueing + service latency (fork expansion,
+    stage-2 decision batches, barrier decrements) — the computation
+    overhead of the management plane: (B, S) float64."""
+    return np.asarray(state["mgmt_proc"]).astype(np.float64)

@@ -34,6 +34,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core import policies as P
+from repro.core import transport as T
 from repro.core.messages import Message, MsgType, beacon, task_start
 
 
@@ -144,26 +145,45 @@ class FleetSim:
 
     Used by examples/serve_clustered.py and tests to exercise the control
     plane end-to-end (placement quality, beacon volume, failure recovery)
-    without TPU hardware."""
+    without TPU hardware.
+
+    Beacon delivery goes through the wall-clock analog of the
+    interconnect transport (``core/transport.host_beacon_delays``,
+    DESIGN.md §10): under the default ``ideal`` topology every receiver's
+    view updates the instant a beacon fires (the historical `_broadcast`
+    fan-out); under ``shared_bus`` / ``hier_tree`` / ``mesh2d`` each
+    receiver sees the update only after its per-receiver delay, so remote
+    views age heterogeneously just like in the tick-domain simulator."""
 
     def __init__(self, k: int = 4, groups_per_cluster: int = 8,
                  dn_th: int = 4, tokens_per_tick: float = 8.0,
                  *, mapping: str = "min_search", beacon: str = "threshold",
-                 T_b: float = float("inf")):
+                 T_b: float = float("inf"), topology: str = "ideal",
+                 msg_delay: float = 1.0, hop_delay: float = 0.5):
+        if topology not in T.TOPOLOGIES:
+            raise ValueError(f"unknown topology {topology!r}; "
+                             f"choose from {T.TOPOLOGIES}")
         self.k = k
         self.schedulers = [ClusterScheduler(c, k, groups_per_cluster, dn_th,
                                             mapping=mapping, beacon=beacon,
                                             T_b=T_b)
                            for c in range(k)]
         self.tokens_per_tick = tokens_per_tick
+        self.topology = topology
+        self.msg_delay = msg_delay      # wall-clock analog of c_b
+        self.hop_delay = hop_delay      # wall-clock analog of c_hop
         # keyed by (cluster, group): a composite int key collides silently
         # once a cluster has >= 1000 groups
         self.active: dict[tuple[int, int], list[Request]] = {}
         self.queue: list[Request] = []
         self.finished: list[Request] = []
         self.beacons_tx = 0
+        self.beacons_rx = 0
+        # in-flight beacon deliveries: (deliver_at, seq, receiver, message)
+        self.pending: list[tuple[float, int, int, Message]] = []
         self.t = 0.0
         self._counter = itertools.count()
+        self._seq = itertools.count()   # heap tie-breaker
 
     def submit(self, req: Request, via_cluster: Optional[int] = None):
         entry = via_cluster if via_cluster is not None \
@@ -179,13 +199,32 @@ class FleetSim:
         msg = sched.maybe_beacon(self.t)
         if msg is not None:
             self.beacons_tx += 1
+            delays = T.host_beacon_delays(self.topology, self.k, sched.cid,
+                                          c_b=self.msg_delay,
+                                          c_hop=self.hop_delay)
             for s in self.schedulers:
-                if s.cid != sched.cid:
-                    s.recv_beacon(msg, self.t)
+                if s.cid == sched.cid:
+                    continue
+                d = float(delays[s.cid])
+                if d <= 0.0:
+                    s.recv_beacon(msg, self.t)      # ideal: instant fan-out
+                    self.beacons_rx += 1
+                else:
+                    heapq.heappush(self.pending, (self.t + d,
+                                                  next(self._seq),
+                                                  s.cid, msg))
+
+    def _deliver_pending(self):
+        """Deliver every in-flight beacon that has reached its receiver."""
+        while self.pending and self.pending[0][0] <= self.t:
+            at, _, rcv, msg = heapq.heappop(self.pending)
+            self.schedulers[rcv].recv_beacon(msg, at)
+            self.beacons_rx += 1
 
     def tick(self, dt: float = 1.0):
         """Advance decode: each group serves its batch at a shared rate."""
         self.t += dt
+        self._deliver_pending()
         for key, reqs in list(self.active.items()):
             c, g = key
             sched = self.schedulers[c]

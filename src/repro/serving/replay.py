@@ -1,0 +1,160 @@
+"""Cross-validation of the wall-clock control plane against the
+tick-domain simulator via trace replay (ROADMAP item; DESIGN.md §10).
+
+``core/policies.py`` guarantees that the traced and host forms of every
+policy agree on synthetic per-decision unit tests.  This module closes
+the remaining gap: it replays *real* decision sequences recorded from a
+TLM simulation through the serving engine's ``ClusterScheduler`` and
+checks the wall-clock adapter reproduces every stage-1 choice the
+tick-domain policy made — same views, same staleness ages, same
+round-robin pointers, hundreds of decisions deep into a workload rather
+than one decision in isolation.
+
+Usage:
+
+    p = SimParams(m=64, k=8, record_s1=True, mapping="staleness_weighted")
+    st = sim.run(p, *workload, sim_len)
+    trace = decision_trace(st, arrival_gmns)
+    report = replay_decisions(trace, p)      # report.mismatches == []
+
+``record_s1=True`` makes the simulator keep, per application, the
+(possibly stale) view each stage-1 decision saw, the shared age vector,
+the chosen clusters, and the pre-fork round-robin pointer (state leaves
+``dec_view``/``dec_age``/``dec_choice``/``dec_rr0``/``dec_t``).
+
+``replay_trace`` additionally drives a full :class:`FleetSim` from the
+recorded arrival sequence — one request per application, submitted at
+the recorded tick through the recorded entry cluster — as an end-to-end
+exercise of the wall-clock engine on a TLM-shaped load.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.serving.engine import ClusterScheduler, FleetSim, Request
+
+
+@dataclass
+class Decision:
+    """One recorded stage-1 decision: inputs and the tick-domain choice."""
+    app: int
+    i: int                       # decision index within the fork
+    gmn: int                     # deciding GMN
+    rr: int                      # round-robin pointer at decision time
+    view: np.ndarray             # (k,) load summaries the decision saw
+    age: np.ndarray              # (k,) staleness ages (own entry 0)
+    t: float                     # arrival tick of the application
+    chosen: int                  # cluster the tick-domain policy picked
+
+
+@dataclass
+class ReplayReport:
+    n_decisions: int
+    mismatches: list = field(default_factory=list)
+
+    @property
+    def agreement(self) -> float:
+        if self.n_decisions == 0:
+            return 1.0
+        return 1.0 - len(self.mismatches) / self.n_decisions
+
+
+def decision_trace(state, arrival_gmns) -> list[Decision]:
+    """Extract the recorded stage-1 decisions from a ``record_s1=True``
+    final state, in application order (completed ARRIVEs only)."""
+    if "dec_choice" not in state:
+        raise ValueError("state has no decision trace; run the simulator "
+                         "with record_s1=True (SimParams/SimShape)")
+    arr = np.asarray(state["app_arrive"])
+    views = np.asarray(state["dec_view"])
+    ages = np.asarray(state["dec_age"])
+    choices = np.asarray(state["dec_choice"])
+    rr0 = np.asarray(state["dec_rr0"])
+    ts = np.asarray(state["dec_t"])
+    gmns = np.asarray(arrival_gmns)
+    ns = choices.shape[1]
+    out = []
+    for app in np.nonzero(arr < 1e17)[0]:
+        for i in range(ns):
+            out.append(Decision(
+                app=int(app), i=i, gmn=int(gmns[app]),
+                rr=int(rr0[app]) + i,
+                view=views[app, i], age=ages[app],
+                t=float(ts[app]), chosen=int(choices[app, i])))
+    return out
+
+
+def _forced_scheduler(dec: Decision, p) -> ClusterScheduler:
+    """A ClusterScheduler whose observable state equals the recorded
+    decision inputs: remote views/receipt times forced, own load set so
+    ``total_load()`` reproduces the view's own entry."""
+    k = dec.view.shape[0]
+    s = ClusterScheduler(dec.gmn, k, n_groups=1, dn_th=p.dn_th,
+                         mapping=p.mapping, T_b=p.T_b)
+    s.remote = dec.view.astype(np.float64)
+    s.remote_t = dec.t - dec.age.astype(np.float64)
+    s.local[0] = float(dec.view[dec.gmn])        # own entry is exact
+    s.map_ctr = dec.rr
+    return s
+
+
+def replay_decisions(trace, p) -> ReplayReport:
+    """Replay every recorded stage-1 decision through the wall-clock
+    ClusterScheduler and compare choices.
+
+    ``p`` is the SimParams the trace was recorded under (its ``mapping``,
+    ``dn_th``, ``T_b`` are used).  The hashed_random policy salts with
+    (app, i), matching the tick domain's (app, decision-index) salt.
+    """
+    from repro.core import policies as P
+
+    report = ReplayReport(n_decisions=len(trace))
+    # two recorded configurations cannot round-trip through a live
+    # ClusterScheduler and go through the shared host adapter directly:
+    # hashed_random salts with the intra-fork decision index (pick_cluster
+    # makes one decision per request, i is always 0), and
+    # staleness_weighted with T_b=inf (the tick domain's degenerate
+    # min_search form, which the scheduler constructor rejects)
+    direct = p.mapping == "hashed_random" or (
+        p.mapping == "staleness_weighted" and not np.isfinite(p.T_b))
+    for dec in trace:
+        if direct:
+            got = P.host_pick(p.mapping, dec.view, dec.age, own=dec.gmn,
+                              rr=dec.rr, salt=dec.app, i=dec.i, T_b=p.T_b)
+        else:
+            s = _forced_scheduler(dec, p)
+            got = s.pick_cluster(now=dec.t, salt=dec.app)
+        if got != dec.chosen:
+            report.mismatches.append((dec, got))
+    return report
+
+
+def replay_trace(state, workload, p, *, wall_per_tick: float = 1e-3,
+                 groups_per_cluster: int = 4,
+                 max_new: int = 8) -> FleetSim:
+    """Drive a FleetSim from a recorded TLM run: one request per
+    completed application, submitted at ``arrival * wall_per_tick``
+    through the recorded entry cluster, decoding between arrivals.
+
+    Returns the driven FleetSim (callers assert on ``finished``,
+    ``beacons_tx``, per-cluster loads, ...)."""
+    arrivals, arrival_gmns, _ = workload
+    arr = np.asarray(state["app_arrive"])
+    order = [int(a) for a in np.argsort(np.asarray(arrivals))
+             if arr[a] < 1e17]
+    fleet = FleetSim(k=p.k, groups_per_cluster=groups_per_cluster,
+                     dn_th=p.dn_th, mapping=p.mapping, beacon=p.beacon,
+                     T_b=p.T_b if np.isfinite(p.T_b) else float("inf"))
+    for app in order:
+        t_wall = float(arrivals[app]) * wall_per_tick
+        while fleet.t < t_wall:
+            fleet.tick(min(1.0, t_wall - fleet.t))
+        fleet.submit(Request(sort_key=t_wall, rid=app, max_new=max_new),
+                     via_cluster=int(arrival_gmns[app]))
+    for _ in range(10_000):
+        if not fleet.active:
+            break
+        fleet.tick()
+    return fleet

@@ -1,0 +1,96 @@
+"""Trace replay: the wall-clock control plane must reproduce the
+tick-domain simulator's stage-1 decisions on recorded real traces
+(serving/replay.py), beyond the synthetic per-decision unit tests of
+test_policies.py."""
+import numpy as np
+import pytest
+
+from repro.core import workloads as W
+from repro.core.sim import SimParams, run
+from repro.serving import replay as R
+
+
+def _params(mapping, **kw):
+    kw.setdefault("m", 16)
+    kw.setdefault("k", 4)
+    kw.setdefault("n_childs", 16)
+    kw.setdefault("max_apps", 32)
+    kw.setdefault("queue_cap", 512)
+    return SimParams(mapping=mapping, record_s1=True, **kw)
+
+
+@pytest.mark.parametrize("mapping", ["min_search", "round_robin",
+                                     "hashed_random", "staleness_weighted"])
+@pytest.mark.parametrize("topology", ["ideal", "mesh2d"])
+def test_replay_decisions_agree_exactly(mapping, topology):
+    """Every stage-1 decision of a full interference run — stale views,
+    staleness ages, round-robin pointers and all — replays identically
+    through the serving engine's host adapters."""
+    p = _params(mapping, topology=topology)
+    wl = W.interference(p, sim_len=3e5, seed=0)
+    st = run(p, *wl, 3e5)
+    trace = R.decision_trace(st, wl[1])
+    assert len(trace) > 50, "trace must cover a real workload"
+    report = R.replay_decisions(trace, p)
+    assert report.agreement == 1.0, report.mismatches[:3]
+
+
+def test_replay_staleness_weighted_infinite_T_b():
+    """Regression: T_b=inf degenerates staleness_weighted to min_search
+    in the tick domain; replay must evaluate the same degenerate policy
+    (not substitute a finite period) and still agree 100%."""
+    p = _params("staleness_weighted", topology="mesh2d", T_b=float("inf"))
+    wl = W.interference(p, sim_len=3e5, seed=0)
+    st = run(p, *wl, 3e5)
+    trace = R.decision_trace(st, wl[1])
+    report = R.replay_decisions(trace, p)
+    assert report.agreement == 1.0, report.mismatches[:3]
+
+
+def test_replay_trace_sees_heterogeneous_views():
+    """Recorded traces under a non-ideal fabric contain genuinely
+    heterogeneous staleness ages (the point of deviation §8.2)."""
+    p = _params("staleness_weighted", topology="shared_bus")
+    wl = W.interference(p, sim_len=3e5, seed=0)
+    st = run(p, *wl, 3e5)
+    trace = R.decision_trace(st, wl[1])
+    hetero = any(len({round(float(a), 3) for j, a in enumerate(d.age)
+                      if j != d.gmn}) > 1 for d in trace)
+    assert hetero, "no decision saw heterogeneous remote ages"
+
+
+def test_decision_trace_requires_recording():
+    p = SimParams(m=16, k=4, n_childs=16, max_apps=32, queue_cap=512)
+    wl = W.interference(p, sim_len=2e5, seed=0)
+    st = run(p, *wl, 2e5)
+    with pytest.raises(ValueError, match="record_s1"):
+        R.decision_trace(st, wl[1])
+
+
+def test_record_s1_does_not_change_results():
+    """Recording is observation only: app_done/beacons are bitwise equal
+    with and without it."""
+    base = SimParams(m=16, k=4, n_childs=16, max_apps=32, queue_cap=512)
+    rec = SimParams(m=16, k=4, n_childs=16, max_apps=32, queue_cap=512,
+                    record_s1=True)
+    wl = W.interference(base, sim_len=2e5, seed=0)
+    st0 = run(base, *wl, 2e5)
+    st1 = run(rec, *wl, 2e5)
+    assert np.array_equal(np.asarray(st0["app_done"]),
+                          np.asarray(st1["app_done"]))
+    assert int(st0["beacons_tx"]) == int(st1["beacons_tx"])
+
+
+def test_replay_trace_drives_fleetsim_end_to_end():
+    """A recorded TLM arrival sequence drives FleetSim to completion:
+    every recorded application becomes a finished request, submitted
+    through its recorded entry cluster."""
+    p = _params("min_search")
+    wl = W.interference(p, sim_len=3e5, seed=0)
+    st = run(p, *wl, 3e5)
+    fleet = R.replay_trace(st, wl, p)
+    n_apps = int((np.asarray(st["app_arrive"]) < 1e17).sum())
+    assert n_apps > 0
+    assert len(fleet.finished) == n_apps
+    assert not fleet.active and not fleet.pending
+    assert fleet.loads().sum() == pytest.approx(0.0, abs=1e-9)

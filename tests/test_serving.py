@@ -88,6 +88,51 @@ def test_active_keys_no_collision_with_1000_plus_groups():
     assert sum(len(v) for v in fleet.active.values()) == 2 * n_groups
 
 
+def test_transport_delays_beacon_delivery():
+    """Under a non-ideal topology a fired beacon reaches remote
+    schedulers only after its per-receiver delay — views are stale in
+    between, then catch up; nothing is lost."""
+    fleet = FleetSim(k=4, groups_per_cluster=2, dn_th=1,
+                     topology="mesh2d", msg_delay=2.0, hop_delay=1.0)
+    for r in _reqs(8):
+        fleet.submit(r)
+    assert fleet.beacons_tx > 0
+    assert fleet.pending, "deliveries must be in flight, not instant"
+    # before any tick no remote view has updated
+    assert fleet.beacons_rx == 0
+    for _ in range(16):
+        fleet.tick()
+    assert not fleet.pending
+    assert fleet.beacons_rx == fleet.beacons_tx * (fleet.k - 1)
+
+
+def test_transport_receivers_hear_at_different_times():
+    """shared_bus serializes the fan-out: receivers record different
+    beacon receipt times (heterogeneous remote_t ages)."""
+    fleet = FleetSim(k=4, groups_per_cluster=2, dn_th=1,
+                     topology="shared_bus", msg_delay=1.0)
+    fleet.submit(_reqs(1)[0])
+    assert fleet.beacons_tx == 1
+    for _ in range(8):
+        fleet.tick()
+    src = next(s.cid for s in fleet.schedulers
+               if s.tx_log and s.tx_log[-1].type.name == "STATUS_BEACON")
+    times = [fleet.schedulers[c].remote_t[src]
+             for c in range(fleet.k) if c != src]
+    assert len(set(times)) == len(times), times
+
+
+def test_ideal_topology_is_instant_like_before():
+    """The default fabric keeps the historical instant fan-out: no
+    pending queue, views update at fire time."""
+    fleet = FleetSim(k=4, groups_per_cluster=2, dn_th=1)
+    for r in _reqs(8):
+        fleet.submit(r)
+    assert fleet.beacons_tx > 0
+    assert not fleet.pending
+    assert fleet.beacons_rx == fleet.beacons_tx * (fleet.k - 1)
+
+
 def test_scheduler_message_log_types():
     from repro.core.messages import MsgType
     s = ClusterScheduler(0, 2, 2, dn_th=1)

@@ -132,6 +132,73 @@ def test_policy_sweep_matches_per_config(mapping, beacon):
                               np.asarray(sti["app_done"]))
 
 
+def test_explicit_ideal_topology_matches_golden():
+    """transport="ideal" must reproduce the pre-transport results
+    bitwise: the same frozen golden grid as above, with the topology
+    passed explicitly (both as a string and via sweep_topologies)."""
+    p = _params()
+    wl = W.interference_batch(p, seeds=(0, 1), sim_len=3e5)
+    kn = SW.knob_batch(dn_th=THRESHOLDS)
+    sti = SW.sweep(p.shape, kn, wl, 3e5, topology="ideal")
+    assert np.asarray(sti["beacons_tx"]).tolist() == _GOLDEN_BEACONS
+    done = np.asarray(sti["app_done"], np.float32)
+    assert hashlib.sha256(done.tobytes()).hexdigest() == _GOLDEN_APP_DONE_SHA
+    by_topo = SW.sweep_topologies(p.shape, kn, wl, topologies=("ideal",),
+                                  sim_len=3e5)
+    assert np.array_equal(np.asarray(by_topo["ideal"]["app_done"]), done)
+    assert np.asarray(by_topo["ideal"]["beacons_tx"]).tolist() \
+        == _GOLDEN_BEACONS
+
+
+# fig3b-grid spot check: the benchmark's threshold row at reduced scale
+# (m=64, k=16, n_childs=50, 6 thresholds, one seed), captured on commit
+# 137008a immediately before the transport subsystem landed.
+_FIG3B_SPOT_BEACONS = [[7178], [4254], [2224], [766], [297], [144]]
+_FIG3B_SPOT_SHA = \
+    "aabc517cabec6be6779f643aad59e0294c19eb29d2799a0eb8484beb88ab1cf2"
+
+
+def test_fig3b_grid_spot_check_ideal_bitwise():
+    p = SimParams(m=64, k=16, n_childs=50, max_apps=128, queue_cap=2048)
+    wl = W.interference_batch(p, seeds=(1,), sim_len=1e6)
+    st_ = SW.sweep(p.shape, SW.knob_batch(dn_th=(1, 2, 4, 8, 16, 32)),
+                   wl, 1e6)
+    assert np.asarray(st_["beacons_tx"]).tolist() == _FIG3B_SPOT_BEACONS
+    done = np.asarray(st_["app_done"], np.float32)
+    assert hashlib.sha256(done.tobytes()).hexdigest() == _FIG3B_SPOT_SHA
+
+
+def test_topology_sweep_matches_per_config():
+    """Non-ideal topologies obey the same sweep-vs-run exactness
+    contract as the default fabric."""
+    from repro.core.sim import run as sim_run
+    p = _params(topology="mesh2d")
+    wl = W.interference_batch(p, seeds=(0,), sim_len=2e5)
+    stb = SW.sweep(p.shape, SW.knob_batch(dn_th=(2, 8)), wl, 2e5,
+                   topology="mesh2d")
+    for i, th in enumerate((2, 8)):
+        sti = sim_run(_params(topology="mesh2d", dn_th=th),
+                      wl[0][0], wl[1][0], wl[2][0], 2e5)
+        assert np.array_equal(np.asarray(stb["beacons_tx"])[i, 0],
+                              np.asarray(sti["beacons_tx"]))
+        assert np.array_equal(np.asarray(stb["app_done"])[i, 0],
+                              np.asarray(sti["app_done"]))
+
+
+def test_transport_knob_sweep_does_not_recompile():
+    """c_hop is a traced knob: sweeping it under a fixed topology re-uses
+    the compiled program."""
+    p = _params(m=8, k=2, n_childs=4, max_apps=8, queue_cap=128,
+                topology="mesh2d")
+    wl = W.independent_batch(p, seeds=(0,), n_apps=1)
+    SW.sweep(p.shape, SW.knob_batch(c_hop=(1.0, 4.0)), wl, 1e7,
+             topology="mesh2d")
+    c0 = SW.cache_size()
+    SW.sweep(p.shape, SW.knob_batch(c_hop=(2.0, 16.0), dn_th=(1, 3)), wl,
+             1e7, topology="mesh2d")
+    assert SW.cache_size() == c0
+
+
 @given(st.sampled_from([2, 4, 8]), st.integers(0, 20))
 @settings(max_examples=8, deadline=None)
 def test_beacons_monotone_in_threshold(k, seed):
