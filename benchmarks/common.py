@@ -23,10 +23,14 @@ from repro.core.transport import TOPOLOGIES
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 
-# JSON schema version of the benchmark payloads.  v2 adds the "meta"
+# JSON schema version of the benchmark payloads.  v2 added the "meta"
 # block (topology_meta below): results/*.json are self-describing about
-# which interconnect fabric produced each number.
-SCHEMA_VERSION = 2
+# which interconnect fabric produced each number.  v3 adds the
+# throughput/cost fields that benchmarks riding the event-queue axis
+# report per row — `events`, `events_per_sec`, `wall_s`,
+# `marginal_wall_s`, `queue_impl` — plus the `paper` grid tier of
+# benchmarks/topology_frontier.py (see benchmarks/README.md).
+SCHEMA_VERSION = 3
 
 
 def topology_meta(topologies=("ideal",), **extra) -> dict:

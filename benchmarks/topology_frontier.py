@@ -15,14 +15,37 @@ explicit transport model (``core/transport.py``) and separating
 The paper's claim decomposes cleanly: the centralized k=1 manager drowns
 in ``proc`` (decision serialization) *and* in ``comm`` (one local bus
 carries every task-start/join of m PEs); the fully-distributed k=m
-configuration pays ``comm`` for the all-to-all beacon/spawn traffic; the
+configuration pays ``comm`` for the all-to-all beacon/spawn traffic; a
 clustered configuration (1 < k < m) minimizes the total on the paper's
 own ``hier_tree`` fabric.  Per-receiver beacon skew (``bcn_skew_*``)
 is reported per topology — zero under ``ideal`` by construction,
 strictly positive under the non-ideal fabrics (the heterogeneity that
 feeds the ``staleness_weighted`` policy).
 
-Usage:  PYTHONPATH=src python -m benchmarks.topology_frontier [--grid tiny]
+Grid tiers (schema v3, benchmarks/README.md):
+
+  tiny        CI smoke at m=16, every fabric, linear queue.
+  paper_tiny  CI proxy for the paper grid at m=64 with the tournament-
+              tree queue (``queue_impl="tree"``, core/eventq.py): gates
+              the tree-vs-linear bitwise claim and an events/sec floor
+              at a scale GitHub runners finish in minutes.
+  default     the PR-3 m=64 saturation-regime grid (c_s raised
+              uniformly), unchanged for trajectory continuity.
+  paper       the true paper scale: m=256, k ∈ {1, 16, 32, 256} across
+              ideal/hier_tree/mesh2d.  The m=256/k=256 points on
+              non-ideal fabrics are exactly what ROADMAP.md called
+              blocked on the O(queue_cap) argmin: every beacon fans out
+              into k-1 = 255 BEACON_RX events, so this tier runs on the
+              tournament-tree queue and records events/sec and
+              marginal cost per grid point next to PR 1's numbers.
+
+Every row reports ``events`` / ``events_per_sec`` / ``wall_s`` (total
+for the point, first seed carries the XLA compile) and
+``marginal_wall_s`` (mean of the warm per-seed runs — the steady-state
+cost of one more grid point, the number PR 1 tracked).
+
+Usage:  PYTHONPATH=src python -m benchmarks.topology_frontier \
+            [--grid tiny|paper_tiny|default|paper]
 """
 from __future__ import annotations
 
@@ -39,58 +62,117 @@ from repro.core.transport import TOPOLOGIES
 
 from benchmarks.common import csv_row, save, timed, topology_meta
 
-# The c_s knob is raised (uniformly across every configuration, so the
-# comparison stays fair) to put the centralized manager into the paper's
-# saturation regime at a scale the CPU sweep finishes in minutes: the
-# decision stream then reserves the k=1 manager's single local bus ahead
-# of the join-exit traffic exactly as at the paper's m=256/c_s=8 point.
+# PR 1 measured the sweep engine's marginal cost per design-space point
+# at 2.4 s (m=256, 4e6 ticks, ideal fabric, linear queue; CHANGES.md).
+# The paper grid reports its marginal_wall_s per row beside this anchor.
+PR1_MARGINAL_S_PER_POINT = 2.4
+
+# In the m=64 tiers the c_s knob is raised (uniformly across every
+# configuration, so the comparison stays fair) to put the centralized
+# manager into the paper's saturation regime at reduced scale; the
+# `paper` tier runs the true m=256 scale with the paper's own c_s=8.
 GRIDS = {
     # CI smoke: all (k x topology) combos in well under two minutes
     "tiny": dict(m=16, ks=(1, 4, 16), n_childs=16, max_apps=64,
                  queue_cap={16: 2048}, default_queue_cap=1024,
-                 c_s=256.0, sim_len=4e5, pair_periods=(33_000.0,),
-                 seeds=(0,)),
+                 c_s=256.0, dn_th=4, sim_len=4e5,
+                 pair_periods=(33_000.0,), seeds=(0,),
+                 queue_impl="linear", topologies=TOPOLOGIES),
+    # CI proxy for the paper grid: small Q, m=64, tournament-tree queue
+    "paper_tiny": dict(m=64, ks=(1, 8, 64), n_childs=50, max_apps=128,
+                       queue_cap={64: 4096}, default_queue_cap=2048,
+                       c_s=40.0, dn_th=4, sim_len=4e5,
+                       pair_periods=(26_000.0,), seeds=(0, 1),
+                       queue_impl="tree",
+                       topologies=("ideal", "hier_tree", "mesh2d")),
     "default": dict(m=64, ks=(1, 8, 64), n_childs=50, max_apps=256,
                     queue_cap={64: 8192}, default_queue_cap=4096,
-                    c_s=40.0, sim_len=2e6, pair_periods=(26_000.0,),
-                    seeds=(1, 2)),
+                    c_s=40.0, dn_th=4, sim_len=2e6,
+                    pair_periods=(26_000.0,), seeds=(1, 2),
+                    queue_impl="linear", topologies=TOPOLOGIES),
+    # the true paper scale (Sec 5 / Table 5): m=256 with the calibrated
+    # interference stimulus; k=256 is the fully-distributed extreme whose
+    # 255-wide beacon fan-out (hundreds of thousands of BEACON_RX
+    # events through a 32k-slot queue) is the point the linear argmin
+    # could not reach on CPU
+    "paper": dict(m=256, ks=(1, 16, 32, 256), n_childs=100, max_apps=64,
+                  queue_cap={256: 32768}, default_queue_cap=8192,
+                  c_s=8.0, dn_th=4, sim_len=1e6,
+                  pair_periods=(14_000.0,), seeds=(1, 2),
+                  queue_impl="tree",
+                  topologies=("ideal", "hier_tree", "mesh2d")),
 }
 
 
+def _point(p, knobs, topo, combos, sim_len):
+    """Run one (k, topology) grid point seed-by-seed so the warm runs are
+    individually timed.  Returns (stacked state with (B, S, ...) leaves,
+    wall_s, marginal_wall_s)."""
+    sts, dts = [], []
+    for pp, seed in combos:
+        wl = W.interference_batch(p, seeds=(seed,), sim_len=sim_len,
+                                  pair_period=pp)
+        # np.asarray inside timed(): sweep returns unrealized async jax
+        # arrays, so timing must include materialization
+        st, dt = timed(lambda: jax.tree.map(
+            np.asarray, SW.sweep(p.shape, knobs, wl, sim_len,
+                                 policy=SW.SimPolicy(), topology=topo)))
+        sts.append(st)
+        dts.append(dt)
+    st = jax.tree.map(lambda *leaves: np.concatenate(leaves, axis=1), *sts)
+    # the first seed's run carries the XLA compile for this static combo;
+    # the warm remainder is the marginal cost of one more grid point.  A
+    # single-combo grid re-times one warm repeat (results are
+    # deterministic and discarded) so marginal/warm fields always mean
+    # steady state, never compile
+    if len(dts) > 1:
+        marginal = float(np.mean(dts[1:]))
+    else:
+        pp, seed = combos[0]
+        wl = W.interference_batch(p, seeds=(seed,), sim_len=sim_len,
+                                  pair_period=pp)
+        _, marginal = timed(lambda: jax.tree.map(
+            np.asarray, SW.sweep(p.shape, knobs, wl, sim_len,
+                                 policy=SW.SimPolicy(), topology=topo)))
+    return st, float(np.sum(dts)), marginal
+
+
 def run(verbose: bool = True, grid: str = "default",
-        topologies=TOPOLOGIES) -> dict:
+        topologies=None) -> dict:
     g = GRIDS[grid]
+    topologies = tuple(topologies if topologies is not None
+                       else g["topologies"])
     missing = {"ideal", "hier_tree"} - set(topologies)
     if missing:
         raise ValueError(f"the headline claims need the {sorted(missing)} "
                          "fabric(s) in `topologies`")
-    m, clustered = g["m"], [k for k in g["ks"] if 1 < k < g["m"]][0]
-    knobs = SW.knob_batch(dn_th=4, c_s=g["c_s"])
+    m, qi = g["m"], g["queue_impl"]
+    clustered_ks = [k for k in g["ks"] if 1 < k < m]
+    combos = [(pp, s) for pp in g["pair_periods"] for s in g["seeds"]]
+    knobs = SW.knob_batch(dn_th=g["dn_th"], c_s=g["c_s"])
     rows = []
     t_total = 0.0
+    events_run = 0                # events from actually-run points only
+                                  # (k=1 replicas excluded)
     for k in g["ks"]:
         p = SimParams(m=m, k=k, n_childs=g["n_childs"],
-                      max_apps=g["max_apps"],
+                      max_apps=g["max_apps"], queue_impl=qi,
                       queue_cap=g["queue_cap"].get(k, g["default_queue_cap"]))
-        wl = W.interference_grid(p, pair_periods=g["pair_periods"],
-                                 seeds=g["seeds"], sim_len=g["sim_len"])
         # with a single cluster no inter-GMN traffic exists, so every
         # fabric produces identical results: run once, replicate the row
         k_topos = topologies if k > 1 else topologies[:1]
         k_rows = []
         for topo in k_topos:
-            # np.asarray inside timed(): sweep returns unrealized async
-            # jax arrays, so timing must include materialization
-            st, dt = timed(lambda: jax.tree.map(
-                np.asarray, SW.sweep(p.shape, knobs, wl, g["sim_len"],
-                                     policy=SW.SimPolicy(), topology=topo)))
-            t_total += dt
+            st, wall, marginal = _point(p, knobs, topo, combos, g["sim_len"])
+            t_total += wall
+            events = int(np.asarray(st["events_processed"]).sum())
+            events_run += events
             comm = SW.mgmt_latency(st)[0]             # (S,)
             proc = SW.mgmt_proc(st)[0]
             msgs = SW.mgmt_msgs(st)[0]
             skew_max = np.asarray(st["bcn_skew_max"], np.float64)[0]
             k_rows.append({
-                "k": k, "topology": topo,
+                "k": k, "topology": topo, "queue_impl": qi,
                 "mean_response": float(np.nanmean(SW.mean_response(st)[0])),
                 "beacons_tx": int(SW.beacons(st)[0].sum()),
                 "beacons_rx": int(SW.beacons_rx(st)[0].sum()),
@@ -101,6 +183,12 @@ def run(verbose: bool = True, grid: str = "default",
                 "comm_per_msg": float(comm.sum() / max(msgs.sum(), 1)),
                 "bcn_skew_max": float(skew_max.max()),
                 "dropped": int(np.asarray(st["dropped"])[0].sum()),
+                "events": events,
+                "events_per_sec": events / max(wall, 1e-9),
+                "warm_events_per_sec": events / len(combos)
+                / max(marginal, 1e-9),
+                "wall_s": wall,
+                "marginal_wall_s": marginal,
             })
         for topo in topologies[len(k_topos):]:
             k_rows.append(dict(k_rows[0], topology=topo))
@@ -109,31 +197,35 @@ def run(verbose: bool = True, grid: str = "default",
     def row(k, topo):
         return next(r for r in rows if r["k"] == k and r["topology"] == topo)
 
-    # headline: on the paper's own fabric, the clustered configuration
-    # carries the lowest total management latency
+    # headline: on the paper's own fabric, a clustered configuration
+    # carries lower total management latency than both extremes
     hier = {k: row(k, "hier_tree") for k in g["ks"]}
+    clustered = min(clustered_ks,
+                    key=lambda k: hier[k]["total_mgmt_latency"])
+    extremes = [k for k in g["ks"] if k == 1 or k == m]
     clustered_wins = all(
         hier[clustered]["total_mgmt_latency"] < hier[k]["total_mgmt_latency"]
-        for k in g["ks"] if k != clustered)
+        for k in extremes)
     # per-receiver beacon ages are verifiably heterogeneous off-ideal
     skew_hetero = {topo: row(clustered, topo)["bcn_skew_max"] > 0.0
                    for topo in topologies if topo != "ideal"}
     ideal_skew_zero = row(clustered, "ideal")["bcn_skew_max"] == 0.0
 
-    # bitwise anchor: the ideal row reproduces a direct (topology-default)
-    # sim.run — the transport subsystem is invisible until opted into
+    # bitwise anchor: the ideal row's configuration reproduces a direct
+    # (topology- and queue-default) sim.run — neither the transport
+    # subsystem nor the tournament-tree queue is visible until opted into
     pd = SimParams(m=m, k=clustered, n_childs=g["n_childs"],
-                   max_apps=g["max_apps"], c_s=g["c_s"],
+                   max_apps=g["max_apps"], c_s=g["c_s"], dn_th=g["dn_th"],
                    queue_cap=g["queue_cap"].get(clustered,
                                                 g["default_queue_cap"]))
-    wl0 = W.interference(pd, sim_len=g["sim_len"],
-                         pair_period=g["pair_periods"][0], seed=g["seeds"][0])
+    pp0, seed0 = combos[0]
+    wl0 = W.interference(pd, sim_len=g["sim_len"], pair_period=pp0,
+                         seed=seed0)
     st0 = sim_run(pd, *wl0, g["sim_len"])
-    stI = SW.sweep(pd.shape, knobs,
-                   W.interference_batch(pd, seeds=(g["seeds"][0],),
-                                        sim_len=g["sim_len"],
-                                        pair_period=g["pair_periods"][0]),
-                   g["sim_len"], topology="ideal")
+    wl0b = W.interference_batch(pd, seeds=(seed0,), sim_len=g["sim_len"],
+                                pair_period=pp0)
+    stI = SW.sweep(pd.shape, knobs, wl0b, g["sim_len"], topology="ideal",
+                   queue_impl=qi)
     ideal_bitwise = bool(
         np.array_equal(np.asarray(stI["app_done"])[0, 0],
                        np.asarray(st0["app_done"]))
@@ -144,11 +236,16 @@ def run(verbose: bool = True, grid: str = "default",
         "grid": grid,
         "rows": rows,
         "clustered_k": clustered,
-        "meta": topology_meta(topologies=list(topologies),
-                              grid=grid, m=m, ks=list(g["ks"])),
+        "queue_impl": qi,
+        "meta": topology_meta(topologies=list(topologies), grid=grid, m=m,
+                              ks=list(g["ks"]), queue_impl=qi),
         "paper_claim": "clustered management reduces both the computation "
                        "(vs k=1) and communication (vs k=m) overhead of "
                        "run-time management (Sec 5.4, Table 5)",
+        "pr1_reference": {
+            "marginal_s_per_point": PR1_MARGINAL_S_PER_POINT,
+            "context": "m=256, 4e6 ticks, ideal fabric, linear queue "
+                       "(CHANGES.md, PR 1)"},
         "claim_ideal_bitwise_vs_run": ideal_bitwise,
         "claim_clustered_lowest_total_mgmt_latency": bool(clustered_wins),
         "claim_skew_heterogeneous_nonideal": bool(all(skew_hetero.values())),
@@ -156,18 +253,36 @@ def run(verbose: bool = True, grid: str = "default",
         "claim_no_drops": all(r["dropped"] == 0 for r in rows),
         "skew_by_topology": skew_hetero,
     }
+
+    if qi == "tree":
+        # the tree queue's bitwise contract, exercised where it matters:
+        # a non-ideal fabric whose k-1 beacon fan-out stresses the bulk
+        # push, compared leaf-for-leaf against the linear golden anchor
+        stL = SW.sweep(pd.shape, knobs, wl0b, g["sim_len"],
+                       topology="hier_tree", queue_impl="linear")
+        stT = SW.sweep(pd.shape, knobs, wl0b, g["sim_len"],
+                       topology="hier_tree", queue_impl="tree")
+        payload["claim_tree_matches_linear_bitwise"] = bool(all(
+            np.array_equal(np.asarray(stL[key]), np.asarray(stT[key]))
+            for key in ("app_done", "app_arrive", "beacons_tx",
+                        "beacons_rx", "events_processed", "dropped")))
+
     save("topology_frontier", payload)
     if verbose:
         csv_row("topology_frontier", t_total * 1e6,
                 f"clustered_best={clustered_wins}"
                 f"|ideal_bitwise={ideal_bitwise}"
-                f"|skew_ok={payload['claim_skew_heterogeneous_nonideal']}")
+                f"|skew_ok={payload['claim_skew_heterogeneous_nonideal']}"
+                f"|queue={qi}"
+                f"|events_per_sec={events_run / max(t_total, 1e-9):,.0f}")
         for r in rows:
             print(f"  k={r['k']:4d} {r['topology']:>10}: "
                   f"comm={r['comm_latency']:.3g} proc={r['proc_latency']:.3g} "
                   f"total={r['total_mgmt_latency']:.3g} "
                   f"skew_max={r['bcn_skew_max']:g} "
-                  f"resp={r['mean_response']:.0f}")
+                  f"resp={r['mean_response']:.0f} "
+                  f"ev/s={r['events_per_sec']:,.0f} "
+                  f"marg={r['marginal_wall_s']:.2f}s")
     return payload
 
 

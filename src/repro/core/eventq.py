@@ -1,0 +1,331 @@
+"""Tournament-tree event queue for the TLM simulator (DESIGN.md §11).
+
+The simulator's hot loop pops the earliest pending event once per
+iteration.  The historical implementation (``queue_impl="linear"``) finds
+it with ``jnp.argmin`` over the whole ``(queue_cap,)`` ``ev_time`` array,
+checks termination with a queue-wide ``min``, and inserts batches with a
+queue-wide stable ``argsort`` — O(Q)-to-O(Q log Q) work per event, which
+ROADMAP.md names as the blocker for the paper's m=256/k=256 distributed
+configuration on non-ideal fabrics (every beacon there fans out into k-1
+BEACON_RX events, so Q must be large exactly where the per-event scan
+hurts most).
+
+This module replaces those scans with a **static-depth tournament tree**,
+a segmented pairwise-min reduction over the event times.  The whole
+queue lives in ONE ``(2*Qp + S, 6)`` f32 array ``evq_tree`` (Qp =
+2**depth >= queue_cap; S = per-segment free counters):
+
+  rows 1..2Qp     the implicit-heap tournament tree (node 0 unused,
+                  root at 1, node n's children at 2n and 2n+1, leaf for
+                  queue slot j at Qp + j).  A row is the full record of
+                  the minimal event in the node's subtree:
+                  [time, slot, ev_type, a0, a1, a2] — each pairwise
+                  reduction copies the winning child's row wholesale, so
+                  the ROOT row is the next event including its payload.
+                  Slot indices and payloads are small exact integers in
+                  f32 (queue_cap is capped at 2**24, event arguments are
+                  app/cluster/PE indices and counts far below it).
+  rows 2Qp..      per-ALLOC_SEG-slot free counters (column 0).
+
+One array is the point, not a convenience: XLA:CPU updates a chain of
+gathers-then-scatters on a single buffer in place, but a second scatter
+whose indices derive from a read of another array forces a full copy of
+the big buffer per event (measured ~60-100 us at Q=32768 — more than
+the whole pop).  Fusing payloads and counters into the tree keeps every
+per-event write on one buffer:
+
+  cond/peek  read the root row: O(1) instead of the O(Q) ``min``; pop
+             needs no payload gathers at all.
+  pop        the root IS (t, slot, type, args); clear the leaf and
+             repair its root path with one sibling gather, an unrolled
+             running-min register chain, and one path scatter —
+             O(log Q).
+  bulk push  allocate slots from the free counters: a cumsum +
+             ``searchsorted`` over Q/64 segments finds each entry's
+             segment, a gathered (n, 64) window of leaf times finds the
+             exact slot — so the j-th masked entry takes the j-th
+             lowest free slot, bitwise the linear impl's
+             first-free-slot rule.  Leaf writes then repair the touched
+             paths **level-parallel**: per level one (n, 2, 6)
+             child-pair gather + one (n, 6) row scatter (duplicate
+             parents write identical rows, so scatter order is
+             irrelevant), O(n + log Q) small ops per batch instead of
+             the queue-wide argsort.
+
+Everything is fixed-shape with no data-dependent control flow: the depth
+is a static Python int (loops unroll at trace time), updates are
+``.at[].set`` writes with traced indices (out-of-range lanes dropped via
+``mode="drop"``), and repairs are idempotent, so masked entries simply
+re-write unchanged rows.  That keeps the structure vmap-able and
+scan-friendly — ``sweep.py``'s "vmap" and "seq" modes stay bitwise
+identical under ``queue_impl="tree"`` (tests/test_eventq.py), and the
+whole queue state is one ordinary state-dict leaf.
+
+Tie-breaking contract: ``jnp.argmin`` returns the LOWEST index among
+equal minima, and same-timestamp events must pop in identical order
+under both impls, so every pairwise reduction here takes the left child
+on ties (``l <= r``) — the left subtree holds the lower slot indices,
+hence the root is the lowest-index argmin at every level
+(tests/test_eventq.py::test_pop_slot_matches_argmin_under_ties).  The
+pop repair reproduces the same rule from the sibling side: the path
+node wins a tie iff it is the left child.
+
+``repro.core.sim`` selects the implementation through the static
+``queue_impl`` axis on ``SimShape`` (one XLA program per value):
+``"linear"`` keeps the historical code operation-for-operation — the
+golden anchor every frozen sha in tests/test_sweep.py gates — and
+``"tree"`` routes pop/push through this module with bitwise-identical
+results.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+INF = jnp.float32(1e18)
+
+QUEUE_IMPLS = ("linear", "tree")
+
+# Free-slot accounting granularity: one counter per ALLOC_SEG queue
+# slots.  64 keeps the per-push cumsum at Q/64 elements (512 at the
+# paper-scale Q=32768) while the within-segment search stays one small
+# (n, 64) gathered window.
+ALLOC_SEG = 64
+
+# Queue slots (and event payloads) are stored as exact small integers in
+# the tree's f32 columns.
+MAX_QUEUE_CAP = 1 << 24
+
+# Row layout: [time, slot, ev_type, a0, a1, a2].
+ROW_W = 6
+
+
+def tree_depth(queue_cap: int) -> int:
+    """Static tree depth: the smallest d with 2**d >= queue_cap."""
+    return max(1, math.ceil(math.log2(max(queue_cap, 2))))
+
+
+def leaf_count(queue_cap: int) -> int:
+    """Padded leaf count Qp = 2**depth (slots >= queue_cap stay INF
+    forever, so the padding is invisible to the simulation)."""
+    return 1 << tree_depth(queue_cap)
+
+
+def seg_count(queue_cap: int) -> int:
+    """Number of ALLOC_SEG-slot segments covering the queue."""
+    return -(-queue_cap // ALLOC_SEG)
+
+
+# --------------------------------------------------------------------------
+# Full rebuilds (vectorized, O(Q)): initial state + the reference the
+# incremental path repairs are property-tested against.
+# --------------------------------------------------------------------------
+
+def build_tree(times, typ=None, a=None):
+    """(queue_cap,) event times (+ optional payloads: ``typ`` (Q,) and
+    ``a`` (Q, 3)) -> the full ``evq_tree`` array: pairwise winner-row
+    reduction with lowest-index tie-breaking, free counters appended."""
+    q = times.shape[0]
+    if q > MAX_QUEUE_CAP:
+        raise ValueError(f"queue_cap {q} exceeds the exact-f32 slot-index "
+                         f"range ({MAX_QUEUE_CAP})")
+    qp = leaf_count(q)
+    times = jnp.asarray(times, jnp.float32)
+    typ = jnp.zeros((q,), jnp.float32) if typ is None \
+        else jnp.asarray(typ, jnp.float32)
+    a = jnp.zeros((q, 3), jnp.float32) if a is None \
+        else jnp.asarray(a, jnp.float32)
+    leaves = jnp.concatenate([
+        jnp.stack([times, jnp.arange(q, dtype=jnp.float32), typ], -1),
+        a], axis=-1)
+    pad = jnp.concatenate([
+        jnp.stack([jnp.full((qp - q,), INF),
+                   jnp.arange(q, qp, dtype=jnp.float32),
+                   jnp.zeros((qp - q,))], -1),
+        jnp.zeros((qp - q, 3))], axis=-1)
+    rows = jnp.concatenate([leaves, pad])
+    levels = [rows]
+    for _ in range(tree_depth(q)):
+        left, right = rows[0::2], rows[1::2]
+        take_l = left[:, 0] <= right[:, 0]   # ties -> left = lower slot
+        rows = jnp.where(take_l[:, None], left, right)
+        levels.append(rows)
+    free = jnp.zeros((seg_count(q), ROW_W))
+    free = free.at[:, 0].set(build_freecnt(times >= INF).astype(jnp.float32))
+    return jnp.concatenate([jnp.zeros((1, ROW_W))] + levels[::-1] + [free])
+
+
+def build_freecnt(free_mask):
+    """(queue_cap,) bool free mask -> (S,) i32 per-segment free-slot
+    counts (the last segment may cover fewer than ALLOC_SEG slots)."""
+    q = free_mask.shape[0]
+    s = seg_count(q)
+    pad = jnp.zeros((s * ALLOC_SEG - q,), bool)
+    return jnp.concatenate([jnp.asarray(free_mask, bool), pad]) \
+        .reshape(s, ALLOC_SEG).sum(axis=1).astype(jnp.int32)
+
+
+def queue_state(queue_cap: int) -> dict:
+    """The state-dict leaf of ``queue_impl="tree"`` (an empty queue: all
+    times INF, all slots free).  The linear impl's ``ev_time`` /
+    ``ev_type`` / ``ev_a`` arrays do not exist in tree mode — times and
+    payloads live in the tree rows (``leaf_times``/``leaf_payloads``)."""
+    return {"evq_tree": build_tree(jnp.full((queue_cap,), INF))}
+
+
+# --------------------------------------------------------------------------
+# Views (tests, debugging).
+# --------------------------------------------------------------------------
+
+def _leaf_base(tree) -> int:
+    """Static leaf offset Qp from the array length 2*Qp + S (S < Qp)."""
+    return 1 << int(math.floor(math.log2(tree.shape[0] // 2)))
+
+
+def leaf_times(st):
+    """(Qp,) per-slot event times from the leaf rows — INF marks a free
+    slot.  Authoritative in tree mode (there is no ``ev_time``)."""
+    tree = st["evq_tree"]
+    qp = _leaf_base(tree)
+    return tree[qp:2 * qp, 0]
+
+
+def leaf_payloads(st):
+    """(Qp, 4) per-slot [ev_type, a0, a1, a2] from the leaf rows."""
+    tree = st["evq_tree"]
+    qp = _leaf_base(tree)
+    return tree[qp:2 * qp, 2:]
+
+
+def freecnt(st):
+    """(S,) i32 per-segment free counts from the counter rows."""
+    tree = st["evq_tree"]
+    qp = _leaf_base(tree)
+    return tree[2 * qp:, 0].astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Queue operations on the simulator state dict.
+# --------------------------------------------------------------------------
+
+def peek_time(st):
+    """Earliest pending event time — the root, O(1).  The tree-mode
+    while-loop condition is ``peek_time(st) < INF``."""
+    return st["evq_tree"][1, 0]
+
+
+def pop(st, depth: int):
+    """Pop the earliest event: the root row IS the event — no argmin, no
+    payload gathers.  Clear the leaf and repair its root path with one
+    sibling gather, an unrolled running-winner register chain, and one
+    path scatter (single-buffer: see module docstring).  Returns
+    ``(st, t, slot, typ, a)`` with ``typ`` i32 and ``a`` (3,) i32 —
+    exactly the values linear mode reads from ``ev_type``/``ev_a``."""
+    qp = 1 << depth
+    tree = st["evq_tree"]
+    root = tree[1]
+    t = root[0]
+    slot = root[1].astype(jnp.int32)
+    typ = root[2].astype(jnp.int32)
+    a = root[3:].astype(jnp.int32)
+    leaf = slot + qp
+    path = leaf >> jnp.arange(depth + 1)             # leaf .. root
+    sib = tree[path[:-1] ^ 1]                        # (depth, 6) one gather
+    is_left = path[:-1] % 2 == 0                     # path node a left child?
+    seg = slot // ALLOC_SEG
+    cnt = tree[2 * qp + seg, 0]                      # free counter row
+    # running winner row from the cleared leaf upward: each ancestor is
+    # the pairwise winner of the running row and the unchanged sibling
+    # row, the tie going to whichever child is on the left
+    run = jnp.concatenate([jnp.stack([INF, slot.astype(jnp.float32), 0.0]),
+                           jnp.zeros((3,))])
+    rows = [run]
+    for lvl in range(depth):
+        pick = jnp.where(is_left[lvl], run[0] <= sib[lvl, 0],
+                         run[0] < sib[lvl, 0])
+        run = jnp.where(pick, run, sib[lvl])
+        rows.append(run)
+    # one scatter writes the whole path plus the freed-slot counter row
+    # (index 2Qp+seg is disjoint from the path, which lies in [1, 2Qp))
+    idx = jnp.concatenate([path, jnp.reshape(2 * qp + seg, (1,))])
+    cnt_row = jnp.concatenate([jnp.reshape(cnt + 1.0, (1,)),
+                               jnp.zeros((ROW_W - 1,))])
+    new = jnp.concatenate([jnp.stack(rows), cnt_row[None, :]])
+    st = dict(st)
+    st["evq_tree"] = tree.at[idx].set(new)
+    return st, t, slot, typ, a
+
+
+def bulk_push(st, mask, times, typ, a0, a1, a2, depth: int, queue_cap: int):
+    """Tree-mode twin of ``sim._bulk_push``: insert the masked entries of
+    an event batch with the identical slot-assignment rule (the j-th
+    masked entry takes the j-th lowest free slot) and identical overflow
+    accounting (excess masked entries drop), but with the queue-wide
+    argsort replaced by the segment-counted allocation and a
+    level-parallel repair of only the touched tree paths."""
+    q = queue_cap
+    qp = 1 << depth
+    tree = st["evq_tree"]
+    s = tree.shape[0] - 2 * qp                       # counter rows
+    mask = jnp.asarray(mask, bool)
+    times = jnp.asarray(times, jnp.float32)
+
+    # -- slot allocation: j-th masked entry -> j-th lowest free slot -----
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1    # rank among masked
+    cnt = mask.sum()
+    csum = jnp.cumsum(tree[2 * qp:, 0].astype(jnp.int32))  # (S,) counters
+    total_free = csum[-1]
+    # first segment whose cumulative free count reaches rank+1
+    seg = jnp.searchsorted(csum, rank + 1, side="left").astype(jnp.int32)
+    segc = jnp.minimum(seg, s - 1)                   # clamped (overflow)
+    r = rank - jnp.where(segc > 0, csum[segc - 1], 0)  # rank within segment
+    # the (r+1)-th free slot inside the segment, from a window of leaf
+    # times (INF = free)
+    cols = segc[:, None] * ALLOC_SEG + jnp.arange(ALLOC_SEG)[None, :]
+    window = tree[qp + jnp.minimum(cols, q - 1), 0]
+    free_w = jnp.logical_and(window >= INF, cols < q)
+    hit = jnp.logical_and(free_w,
+                          jnp.cumsum(free_w, axis=1) == r[:, None] + 1)
+    slot = segc * ALLOC_SEG + jnp.argmax(hit, axis=1).astype(jnp.int32)
+    ok = jnp.logical_and(mask, rank < total_free)
+
+    st = dict(st)
+    st["dropped"] = st["dropped"] + jnp.maximum(cnt - total_free, 0)
+
+    # -- leaf + counter writes (out-of-range lanes drop) -----------------
+    leaf_rows = jnp.stack([times, slot.astype(jnp.float32),
+                           jnp.full(mask.shape, typ, jnp.float32),
+                           jnp.asarray(a0, jnp.float32),
+                           jnp.asarray(a1, jnp.float32),
+                           jnp.asarray(a2, jnp.float32)], -1)
+    oob = tree.shape[0]
+    tree = tree.at[jnp.where(ok, slot + qp, oob)].set(leaf_rows, mode="drop")
+    # an ok entry with time >= INF takes its slot in the assignment order
+    # (as in linear mode) but leaves the leaf free, so it must not
+    # decrement the segment counter — counters always equal the number
+    # of INF leaves per segment (tests/test_eventq.py)
+    dec = jnp.where(jnp.logical_and(ok, times < INF), -1.0, 0.0)
+    tree = tree.at[jnp.where(ok, 2 * qp + segc, oob), 0].add(dec, mode="drop")
+
+    # -- touched-path repair, level-parallel ----------------------------
+    # Per level, the n touched parents gather their two children's rows,
+    # take the winner, and scatter back.  Entries sharing a parent
+    # compute identical rows (the gathers see all lower-level writes),
+    # so duplicate scatters are order-independent; untouched nodes are
+    # never written.
+    two = jnp.arange(2)[None, :]                     # (1, 2) child offsets
+    for lvl in range(depth):
+        parent = (slot + qp) >> (lvl + 1)
+        kids = tree[2 * parent[:, None] + two]       # (n, 2, 6) one gather
+        take_l = kids[:, 0, 0] <= kids[:, 1, 0]      # ties -> left child
+        prow = jnp.where(take_l[:, None], kids[:, 0], kids[:, 1])
+        tree = tree.at[jnp.where(ok, parent, oob)].set(prow, mode="drop")
+    st["evq_tree"] = tree
+    return st
+
+
+def empty(queue_cap: int) -> dict:
+    """A minimal standalone queue state (no simulator around it) — the
+    harness tests/test_eventq.py drives push/pop against directly."""
+    return {"dropped": jnp.zeros((), jnp.int32)} | queue_state(queue_cap)

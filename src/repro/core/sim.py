@@ -10,7 +10,14 @@ Faithful JAX re-implementation of the paper's TLM evaluation (Sec 5):
              synchronization (Tab 2).
 
 All state lives in fixed-shape arrays; the run is one ``lax.while_loop``
-over a bounded event queue.
+over a bounded event queue.  The queue's priority structure is itself a
+static axis (``queue_impl``, core/eventq.py, DESIGN.md §11): ``"linear"``
+pops with an O(queue_cap) ``jnp.argmin`` scan — the historical code,
+kept operation-for-operation as the golden anchor — while ``"tree"``
+maintains a static-depth tournament tree for O(log queue_cap) pop/push
+with bitwise-identical results, which is what makes the paper-scale
+m=256/k=256 distributed runs tractable on CPU
+(benchmarks/topology_frontier.py --grid paper).
 
 Parameters are split into three objects (see DESIGN.md §7/§9):
 
@@ -70,12 +77,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import eventq as EQ
 from repro.core import policies as P
 from repro.core import transport as T
+from repro.core.eventq import QUEUE_IMPLS  # noqa: F401 (re-export)
+# the single INF sentinel both queue impls compare against — the
+# linear/tree bitwise contract hinges on it being one shared value
+from repro.core.eventq import INF
 from repro.core.policies import DEFAULT_POLICY, SimPolicy  # noqa: F401 (re-export)
 from repro.core.transport import DEFAULT_TOPOLOGY, Topology  # noqa: F401 (re-export)
-
-INF = jnp.float32(1e18)
 
 EV_ARRIVE = 0
 EV_LOCAL_SPAWN = 1
@@ -94,6 +104,15 @@ class SimShape:
     max_apps: int = 512
     record_s1: bool = False      # record per-decision stage-1 traces
                                  # (view/age/choice) for serving.replay
+    queue_impl: str = "linear"   # event-queue structure (core/eventq.py):
+                                 # "linear" = O(Q) argmin scan (golden
+                                 # anchor), "tree" = O(log Q) tournament
+                                 # tree, bitwise-identical results
+
+    def __post_init__(self):
+        if self.queue_impl not in QUEUE_IMPLS:
+            raise ValueError(f"unknown queue_impl {self.queue_impl!r}; "
+                             f"choose from {QUEUE_IMPLS}")
 
     @property
     def mpk(self) -> int:
@@ -149,6 +168,12 @@ class SimParams:
     beacon: str = "threshold"    # beacon policy (static, core/policies.py)
     topology: str = "ideal"      # fabric model (static, core/transport.py)
     record_s1: bool = False      # record stage-1 decision traces (replay)
+    queue_impl: str = "linear"   # event-queue structure (core/eventq.py)
+
+    def __post_init__(self):
+        if self.queue_impl not in QUEUE_IMPLS:
+            raise ValueError(f"unknown queue_impl {self.queue_impl!r}; "
+                             f"choose from {QUEUE_IMPLS}")
 
     @property
     def mpk(self) -> int:
@@ -158,7 +183,8 @@ class SimParams:
     def shape(self) -> SimShape:
         return SimShape(m=self.m, k=self.k, n_childs=self.n_childs,
                         queue_cap=self.queue_cap, max_apps=self.max_apps,
-                        record_s1=self.record_s1)
+                        record_s1=self.record_s1,
+                        queue_impl=self.queue_impl)
 
     @property
     def knobs(self) -> SimKnobs:
@@ -197,8 +223,8 @@ class _Ctx:
     historically used."""
     __slots__ = ("m", "k", "mpk", "n_childs", "queue_cap", "max_apps",
                  "c_b", "c_s", "c_join", "dn_th", "T_b", "c_hop", "policy",
-                 "topology", "hops", "ns", "record_s1",
-                 "sel_global", "sel_local")
+                 "topology", "hops", "ns", "record_s1", "queue_impl",
+                 "qdepth", "sel_global", "sel_local")
 
     def __init__(self, shape: SimShape, knobs: SimKnobs,
                  policy: SimPolicy = DEFAULT_POLICY,
@@ -221,17 +247,25 @@ class _Ctx:
         self.hops = jnp.asarray(T.mesh_hops(shape.k))
         self.ns = shape.ns
         self.record_s1 = shape.record_s1
+        self.queue_impl = shape.queue_impl
+        self.qdepth = EQ.tree_depth(shape.queue_cap)   # static tree depth
         self.sel_global = knobs.c_s * _log2_levels(shape.k)
         self.sel_local = knobs.c_s * _log2_levels(shape.mpk)
 
 
 def make_state(p):
     k, mpk, Q, A = p.k, p.mpk, p.queue_cap, p.max_apps
-    return {
+    tree = getattr(p, "queue_impl", "linear") == "tree"
+    return ({
+        # tournament tree (core/eventq.py, DESIGN.md §11): times AND
+        # payloads live in the tree rows; the ev_* arrays below do not
+        # exist in tree mode
+        } | EQ.queue_state(Q) if tree else {
         # event queue (slot-recycled)
         "ev_time": jnp.full((Q,), INF),
         "ev_type": jnp.zeros((Q,), jnp.int32),
         "ev_a": jnp.zeros((Q, 3), jnp.int32),      # (app, gmn/cluster, pe/cnt)
+    }) | {
         # infra
         "pe_free": jnp.zeros((k, mpk), jnp.float32),
         "gmn_free": jnp.zeros((k,), jnp.float32),
@@ -291,11 +325,6 @@ def make_state(p):
 _set1 = T._set1
 
 
-def _setcol(arr, j, val):
-    """arr.at[:, j].set(val) as a one-hot select."""
-    return jnp.where(jnp.arange(arr.shape[1])[None, :] == j, val, arr)
-
-
 def _add1(arr, i, delta):
     """arr.at[i].add(delta) as a one-hot select."""
     return jnp.where(jnp.arange(arr.shape[0]) == i, arr + delta, arr)
@@ -308,19 +337,25 @@ def _add2(arr, i, j, delta):
     return jnp.where(hot, arr + delta, arr)
 
 
-def _set2(arr, i, j, val):
-    """arr.at[i, j].set(val) as a one-hot select."""
-    hot = (jnp.arange(arr.shape[0])[:, None] == i) \
-        & (jnp.arange(arr.shape[1])[None, :] == j)
-    return jnp.where(hot, val, arr)
-
-
-def _bulk_push(st, mask, times, typ, a0, a1, a2):
+def _bulk_push(st, p, mask, times, typ, a0, a1, a2):
     """Insert the masked entries of an event batch, exactly equivalent to
     pushing them one by one in order (the j-th masked entry takes the j-th
-    free queue slot, matching the historical first-free-slot search), but
-    as one vectorized pass over the queue — the sequential version costs a
-    queue-wide scan per entry, which dominated batched-sweep runtime."""
+    free queue slot, matching the historical first-free-slot search).
+
+    Two implementations sit behind the static ``p.queue_impl`` axis with
+    bitwise-identical results (same slot assignment, same drop
+    accounting — tests/test_eventq.py):
+
+      "linear"  one vectorized pass over the whole queue (cumsum of the
+                free mask + a stable argsort), O(Q log Q) per batch.
+                Kept operation-for-operation as the golden anchor.
+      "tree"    the tournament-tree path repair (core/eventq.py):
+                O(log Q) per entry, only the touched root-to-leaf paths
+                are recomputed.
+    """
+    if p.queue_impl == "tree":
+        return EQ.bulk_push(st, mask, times, typ, a0, a1, a2, p.qdepth,
+                            p.queue_cap)
     n = times.shape[0]
     free = st["ev_time"] >= INF
     free_rank = jnp.cumsum(free) - 1                 # slot's rank among free
@@ -355,13 +390,17 @@ def _maybe_beacon(st, p, g, t):
     fire = jnp.logical_and(due, p.k > 1)
     st = dict(st)
     if p.topology.kind == "ideal":
-        # bus grant: serialize on the global bus; atomic view update
+        # bus grant: serialize on the global bus; atomic view update.
+        # Column .at[] updates, not (k, k) one-hot selects: at the paper
+        # point k=256 the one-hot form pays a full 65k-element pass per
+        # event; the stored values are identical (element [i, g] becomes
+        # fire ? x : old either way), so the frozen goldens still pass
         t_tx = jnp.maximum(t, st["gbus_free"]) + p.c_b
         st["gbus_free"] = jnp.where(fire, t_tx, st["gbus_free"])
-        st["view"] = jnp.where(fire, _setcol(st["view"], g, load_g),
-                               st["view"])
-        st["view_t"] = jnp.where(fire, _setcol(st["view_t"], g, t_tx),
-                                 st["view_t"])
+        st["view"] = st["view"].at[:, g].set(
+            jnp.where(fire, load_g, st["view"][:, g]))
+        st["view_t"] = st["view_t"].at[:, g].set(
+            jnp.where(fire, t_tx, st["view_t"][:, g]))
         st["last_bcast"] = jnp.where(fire, _set1(st["last_bcast"], g, load_g),
                                      st["last_bcast"])
         st["last_bcast_t"] = jnp.where(fire,
@@ -374,7 +413,25 @@ def _maybe_beacon(st, p, g, t):
             + jnp.where(fire, nrcv.astype(jnp.float32) * (t_tx - t), 0.0)
         return st
 
-    # transport path: per-receiver delivery through the fabric
+    # transport path: per-receiver delivery through the fabric.  The
+    # whole fan-out (fabric grants, in-flight matrix, k-entry queue
+    # push) is gated behind lax.cond: with `fire` false every masked
+    # update below is an exact no-op, so skipping the branch is bitwise
+    # invisible — but on CPU (seq mode) the common no-fire event then
+    # pays nothing, where the masked code would still run the k-wide
+    # push machinery.  Under vmap the cond lowers to a select that
+    # executes both branches, which is exactly the pre-gate behavior.
+    return jax.lax.cond(fire,
+                        lambda s: _beacon_fanout(s, p, g, t, fire, load_g),
+                        lambda s: s, st)
+
+
+def _beacon_fanout(st, p, g, t, fire, load_g):
+    """The non-ideal beacon delivery path (only traced when `fire` can be
+    true; all updates stay masked by the traced `fire` so the cond's
+    both-branch vmap lowering reproduces the masked semantics
+    bitwise)."""
+    st = dict(st)
     t_tx, t_arr, gbus, lbus = T.beacon_tx(
         p.topology, g, t, fire, gbus=st["gbus_free"], lbus=st["lbus_free"],
         c_b=p.c_b, c_hop=p.c_hop, hops=p.hops, k=p.k)
@@ -384,13 +441,18 @@ def _maybe_beacon(st, p, g, t):
     # track the latest pending arrival per (src, rcv); arrivals from one
     # source to one receiver are strictly increasing in send order
     # (c_b > 0 serializes the source), so earlier beacons still in the
-    # event queue deliver first and the matrix drains on the last one
-    row_t = jnp.where(rcv, t_arr, st["bcn_t"][g])
-    st["bcn_t"] = jnp.where(fire, _set1(st["bcn_t"], g, row_t), st["bcn_t"])
+    # event queue deliver first and the matrix drains on the last one.
+    # Row-indexed .at[] updates, not one-hot selects: this path only
+    # compiles off-ideal where k can be 256 (a (k, k) one-hot select is
+    # a full 65k-element pass per event there); the stored values are
+    # identical, so sweep-vs-run and vmap-vs-seq stay bitwise.
+    st["bcn_t"] = st["bcn_t"].at[g].set(
+        jnp.where(jnp.logical_and(fire, rcv), t_arr, st["bcn_t"][g]))
     # the sender's own entry is bookkeeping, not a message: exact at tx
-    st["view"] = jnp.where(fire, _set2(st["view"], g, g, load_g), st["view"])
-    st["view_t"] = jnp.where(fire, _set2(st["view_t"], g, g, t_tx),
-                             st["view_t"])
+    st["view"] = st["view"].at[g, g].set(
+        jnp.where(fire, load_g, st["view"][g, g]))
+    st["view_t"] = st["view_t"].at[g, g].set(
+        jnp.where(fire, t_tx, st["view_t"][g, g]))
     st["last_bcast"] = jnp.where(fire, _set1(st["last_bcast"], g, load_g),
                                  st["last_bcast"])
     st["last_bcast_t"] = jnp.where(fire, _set1(st["last_bcast_t"], g, t_tx),
@@ -404,7 +466,7 @@ def _maybe_beacon(st, p, g, t):
     st["bcn_skew_sum"] = st["bcn_skew_sum"] + jnp.where(fire, spread, 0.0)
     st["bcn_skew_max"] = jnp.maximum(st["bcn_skew_max"],
                                      jnp.where(fire, spread, 0.0))
-    return _bulk_push(st, push, t_arr, EV_BEACON_RX,
+    return _bulk_push(st, p, push, t_arr, EV_BEACON_RX,
                       jnp.full((p.k,), g), jnp.arange(p.k),
                       jnp.full((p.k,), load_g))
 
@@ -419,10 +481,14 @@ def _handle_beacon_rx(st, p, t, src, rcv, load):
     which is what lets tests assert it drains to empty."""
     last = st["bcn_t"][src, rcv] == t
     st = dict(st)
-    st["bcn_t"] = jnp.where(last, _set2(st["bcn_t"], src, rcv, INF),
-                            st["bcn_t"])
-    st["view"] = _set2(st["view"], rcv, src, load)
-    st["view_t"] = _set2(st["view_t"], rcv, src, t)
+    # scalar .at[] updates, not (k, k) one-hot selects: this handler runs
+    # once per receiver per beacon (the k-1 fan-out), so at k=256 the
+    # one-hot form pays three full 65k-element passes per delivery;
+    # the stored values are identical, keeping all bitwise contracts
+    st["bcn_t"] = st["bcn_t"].at[src, rcv].set(
+        jnp.where(last, INF, st["bcn_t"][src, rcv]))
+    st["view"] = st["view"].at[rcv, src].set(load)
+    st["view_t"] = st["view_t"].at[rcv, src].set(t)
     st["beacons_rx"] = st["beacons_rx"] + 1
     return st
 
@@ -488,7 +554,7 @@ def _handle_arrive(st, p, t, app, g, _unused, lengths):
         st["dec_rr0"] = _set1(st["dec_rr0"], app, rr0)
         st["dec_t"] = _set1(st["dec_t"], app, t)
 
-    return _bulk_push(st, jnp.ones((ns,), bool), t_arrs, EV_LOCAL_SPAWN,
+    return _bulk_push(st, p, jnp.ones((ns,), bool), t_arrs, EV_LOCAL_SPAWN,
                       jnp.full((ns,), app), cs, cnts)
 
 
@@ -544,7 +610,7 @@ def _handle_local_spawn(st, p, t, app, g, cnt, lengths):
 
     st = _maybe_beacon(st, p, g, t_cpu)
 
-    return _bulk_push(st, actives, finishes, EV_JOIN_EXIT,
+    return _bulk_push(st, p, actives, finishes, EV_JOIN_EXIT,
                       jnp.full((n_max,), app), jnp.full((n_max,), g), pes)
 
 
@@ -594,12 +660,16 @@ def simulate(shape: SimShape, knobs: SimKnobs, arrivals, arrival_gmns,
     st = make_state(p)
 
     n_apps = arrivals.shape[0]
-    st = _bulk_push(st, arrivals < sim_len, arrivals, EV_ARRIVE,
+    st = _bulk_push(st, p, arrivals < sim_len, arrivals, EV_ARRIVE,
                     jnp.arange(n_apps), arrival_gmns,
                     jnp.zeros((n_apps,), jnp.int32))
 
-    def cond(st):
-        return st["ev_time"].min() < INF
+    if p.queue_impl == "tree":
+        def cond(st):
+            return EQ.peek_time(st) < INF              # tree root, O(1)
+    else:
+        def cond(st):
+            return st["ev_time"].min() < INF           # O(Q) linear scan
 
     branches = [
         lambda s, t, a: _handle_arrive(s, p, t, a[0], a[1], a[2], lengths),
@@ -617,12 +687,18 @@ def simulate(shape: SimShape, knobs: SimKnobs, arrivals, arrival_gmns,
             lambda s, t, a: _handle_beacon_rx(s, p, t, a[0], a[1], a[2]))
 
     def body(st):
-        slot = jnp.argmin(st["ev_time"])
-        t = st["ev_time"][slot]
-        typ = st["ev_type"][slot]
-        a = st["ev_a"][slot]
+        if p.queue_impl == "tree":
+            # O(log Q): the tree root IS the event (time, type, args
+            # included) — one row read plus one path repair
+            st, t, slot, typ, a = EQ.pop(st, p.qdepth)
+        else:
+            slot = jnp.argmin(st["ev_time"])              # O(Q) per event
+            t = st["ev_time"][slot]
+            typ = st["ev_type"][slot]
+            a = st["ev_a"][slot]
+            st = dict(st)
+            st["ev_time"] = _set1(st["ev_time"], slot, INF)  # recycle slot
         st = dict(st)
-        st["ev_time"] = _set1(st["ev_time"], slot, INF)   # recycle slot
         st["events_processed"] = st["events_processed"] + 1
         st = jax.lax.switch(typ, [lambda s, b=b: b(s, t, a)
                                   for b in branches], st)

@@ -3,9 +3,9 @@
 The paper's evaluation is a design-space exploration: sweep the beacon
 threshold ``dn_th`` and the cost coefficients across cluster counts and
 workload seeds (Figs 2-3, Table 5).  ``sim.run`` compiles once per
-``SimShape`` (m, k, n_childs, queue_cap, max_apps); this module goes one
-step further and runs a whole grid of knob configs x workload seeds in a
-single compiled program:
+``SimShape`` (m, k, n_childs, queue_cap, max_apps, queue_impl); this
+module goes one step further and runs a whole grid of knob configs x
+workload seeds in a single compiled program:
 
     p = SimParams(m=256, k=16)
     knobs = knob_batch(dn_th=(1, 2, 4, 8, 16, 32))        # B = 6 configs
@@ -27,6 +27,7 @@ grid costs one compilation per (m, k) shape instead of one per point.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import itertools
 
@@ -102,7 +103,8 @@ def _sweep(shape, knobs, arrivals, gmns, lengths, sim_len,
 
 def sweep(shape, knobs: SimKnobs, workload, sim_len: float = 1e7,
           mode: str = "auto", policy: SimPolicy = DEFAULT_POLICY,
-          topology: Topology = DEFAULT_TOPOLOGY):
+          topology: Topology = DEFAULT_TOPOLOGY,
+          queue_impl: str | None = None):
     """Run B knob configs x S workloads with one compilation per
     (shape, policy, topology).
 
@@ -127,10 +129,18 @@ def sweep(shape, knobs: SimKnobs, workload, sim_len: float = 1e7,
                 compile per (shape, policy, topology), zero recompiles
                 across the grid) — the fast path on CPU.
               - "auto" (default): "seq" on CPU, "vmap" elsewhere.
+    queue_impl  event-queue structure override (core/eventq.py,
+              DESIGN.md §11): "linear" or "tree".  Part of the static
+              shape; None (default) keeps ``shape.queue_impl``.  Results
+              are bitwise identical across impls — "tree" replaces the
+              O(queue_cap) argmin per event with O(log queue_cap) tree
+              repairs, the difference is wall-clock only.
 
     Returns the final-state dict with every leaf batched to (B, S, ...).
     """
     shape = _as_shape(shape)
+    if queue_impl is not None and queue_impl != shape.queue_impl:
+        shape = dataclasses.replace(shape, queue_impl=queue_impl)
     arrivals, gmns, lengths = workload
     arrivals = jnp.asarray(arrivals, jnp.float32)
     gmns = jnp.asarray(gmns, jnp.int32)

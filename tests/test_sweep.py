@@ -199,6 +199,68 @@ def test_transport_knob_sweep_does_not_recompile():
     assert SW.cache_size() == c0
 
 
+# --- queue_impl="tree" (core/eventq.py, DESIGN.md §11) gates: the
+# tournament-tree queue must reproduce every frozen golden bitwise — the
+# structure reorders *work*, never results.
+
+def test_tree_impl_matches_pre_refactor_golden():
+    """The tournament-tree event queue reproduces the PR-2 frozen golden
+    grid bitwise (same beacons, same app_done sha)."""
+    p = _params(queue_impl="tree")
+    wl = W.interference_batch(p, seeds=(0, 1), sim_len=3e5)
+    stb = SW.sweep(p.shape, SW.knob_batch(dn_th=THRESHOLDS), wl, 3e5)
+    assert np.asarray(stb["beacons_tx"]).tolist() == _GOLDEN_BEACONS
+    done = np.asarray(stb["app_done"], np.float32)
+    assert hashlib.sha256(done.tobytes()).hexdigest() == _GOLDEN_APP_DONE_SHA
+    st1 = run(p, *W.independent_tasks(p, n_apps=1), 1e7)
+    assert float(np.asarray(st1["app_done"])[0]) == 16240.0
+    assert int(st1["beacons_tx"]) == 8
+
+
+def test_tree_impl_matches_fig3b_spot_golden():
+    """The fig3b-shaped spot grid (captured at 137008a) under the tree
+    queue: identical beacons and app_done sha."""
+    p = SimParams(m=64, k=16, n_childs=50, max_apps=128, queue_cap=2048,
+                  queue_impl="tree")
+    wl = W.interference_batch(p, seeds=(1,), sim_len=1e6)
+    st_ = SW.sweep(p.shape, SW.knob_batch(dn_th=(1, 2, 4, 8, 16, 32)),
+                   wl, 1e6)
+    assert np.asarray(st_["beacons_tx"]).tolist() == _FIG3B_SPOT_BEACONS
+    done = np.asarray(st_["app_done"], np.float32)
+    assert hashlib.sha256(done.tobytes()).hexdigest() == _FIG3B_SPOT_SHA
+
+
+@pytest.mark.parametrize("topology", ["hier_tree", "mesh2d"])
+def test_tree_impl_matches_linear_on_nonideal_fabric(topology):
+    """Tree and linear queues agree bitwise on the non-ideal fabrics too,
+    where the k-1 BEACON_RX fan-out exercises big event batches."""
+    p = _params(topology=topology)
+    wl = W.interference_batch(p, seeds=(0,), sim_len=3e5)
+    kn = SW.knob_batch(dn_th=(1, 4))
+    lin = SW.sweep(p.shape, kn, wl, 3e5, topology=topology,
+                   queue_impl="linear")
+    tre = SW.sweep(p.shape, kn, wl, 3e5, topology=topology,
+                   queue_impl="tree")
+    for key in ("app_done", "app_arrive", "beacons_tx", "beacons_rx",
+                "events_processed", "dropped", "mgmt_msgs", "mgmt_latency",
+                "mgmt_proc", "bcn_skew_sum", "bcn_skew_max", "view",
+                "view_t", "loads"):
+        assert np.array_equal(np.asarray(lin[key]), np.asarray(tre[key])), key
+
+
+def test_queue_impl_sweep_kwarg_overrides_shape():
+    """sweep(queue_impl=...) swaps the static impl without mutating the
+    caller's shape, and both impls share one compile per value."""
+    p = _params()
+    assert p.shape.queue_impl == "linear"
+    wl = W.interference_batch(p, seeds=(0,), sim_len=1e5)
+    kn = SW.knob_batch(dn_th=(2,))
+    a = SW.sweep(p.shape, kn, wl, 1e5, queue_impl="tree")
+    b = SW.sweep(p.shape, kn, wl, 1e5)
+    assert p.shape.queue_impl == "linear"
+    assert np.array_equal(np.asarray(a["app_done"]), np.asarray(b["app_done"]))
+
+
 @given(st.sampled_from([2, 4, 8]), st.integers(0, 20))
 @settings(max_examples=8, deadline=None)
 def test_beacons_monotone_in_threshold(k, seed):
