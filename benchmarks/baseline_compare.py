@@ -8,15 +8,15 @@ computation overhead that saturates a centralized manager and the
 communication/staleness overhead that penalizes a fully-distributed one,
 so it wins on response time once the system is under load.
 
-Runs on the batched sweep engine: per k, the whole (arrival-rate x seed)
-grid is one vmapped run — one compilation per (m, k) shape."""
+Runs as ONE declarative experiment (core/experiment.py): k is the
+static shape axis; the (arrival-rate x seed) grid is one traced
+workload lane axis — one XLA program per k."""
 from __future__ import annotations
 
-import jax
 import numpy as np
 
-from repro.core import sweep as SW
 from repro.core import workloads as W
+from repro.core.experiment import ExperimentSpec, WorkloadSpec
 from repro.core.sim import SimParams
 
 from benchmarks.common import csv_row, save, timed
@@ -30,19 +30,21 @@ SEEDS = (1, 2)
 
 def run(verbose: bool = True, ks=KS, pair_periods=PAIR_PERIODS,
         seeds=SEEDS, sim_len: float = 2e6) -> dict:
+    spec = ExperimentSpec(
+        base=SimParams(m=M, n_childs=100, max_apps=512, queue_cap=2048),
+        shapes=tuple(ks),
+        knobs={"dn_th": 4},
+        workloads=(WorkloadSpec.make("interference", seeds=seeds,
+                                     pair_periods=tuple(pair_periods)),),
+        sim_len=sim_len)
+    frame, t_total = timed(spec.run)
+
     rows = {}
-    t_total = 0.0
-    knobs = SW.knob_batch(dn_th=4)
+    grid = (len(pair_periods), len(seeds))
     for k in ks:
         p = SimParams(m=M, k=k, n_childs=100, max_apps=512, queue_cap=2048)
-        wl = W.interference_grid(p, pair_periods=pair_periods, seeds=seeds,
-                                 sim_len=sim_len)
-        st, dt = timed(lambda: jax.block_until_ready(
-            SW.sweep(p.shape, knobs, wl, sim_len)))
-        t_total += dt
-        grid = (len(pair_periods), len(seeds))
-        mr = SW.mean_response(st)[0].reshape(grid).mean(axis=1)
-        sp = SW.speedup(st, wl[2])[0].reshape(grid).mean(axis=1)
+        mr = frame.mean_response(k=k).reshape(grid).mean(axis=1)
+        sp = frame.speedup(k=k).reshape(grid).mean(axis=1)
         rows[str(k)] = {
             "pair_period": list(pair_periods),
             "offered_load": [float(W.offered_load(p, pp))
@@ -66,7 +68,7 @@ def run(verbose: bool = True, ks=KS, pair_periods=PAIR_PERIODS,
                        "(vs k=1) and communication (vs k=m) overhead "
                        "(Sec 5.4, Table 5)",
     }
-    save("baseline_compare", payload)
+    save("baseline_compare", payload, spec=spec)
     if verbose:
         gain_1 = float((mr_1 / mr_c).mean())
         gain_m = float((mr_m / mr_c).mean())

@@ -25,12 +25,16 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 
 # JSON schema version of the benchmark payloads.  v2 added the "meta"
 # block (topology_meta below): results/*.json are self-describing about
-# which interconnect fabric produced each number.  v3 adds the
+# which interconnect fabric produced each number.  v3 added the
 # throughput/cost fields that benchmarks riding the event-queue axis
 # report per row — `events`, `events_per_sec`, `wall_s`,
 # `marginal_wall_s`, `queue_impl` — plus the `paper` grid tier of
-# benchmarks/topology_frontier.py (see benchmarks/README.md).
-SCHEMA_VERSION = 3
+# benchmarks/topology_frontier.py.  v4 embeds the serialized
+# ExperimentSpec that produced the numbers under a top-level "spec" key
+# (core/experiment.py; null for benchmarks that don't ride the
+# experiment engine) — every payload carries its full design-space
+# provenance (see benchmarks/README.md).
+SCHEMA_VERSION = 4
 
 
 def topology_meta(topologies=("ideal",), **extra) -> dict:
@@ -48,10 +52,18 @@ def topology_meta(topologies=("ideal",), **extra) -> dict:
     }
 
 
-def save(name: str, payload: dict):
+def save(name: str, payload: dict, spec=None):
+    """Write ``results/<name>.json``.  ``spec`` is the ExperimentSpec (or
+    its ``to_dict()``) that produced the payload — embedded verbatim as
+    schema-v4 provenance; None marks a benchmark that doesn't ride the
+    experiment engine."""
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")
     payload.setdefault("meta", topology_meta())
+    if hasattr(spec, "to_dict"):
+        spec = spec.to_dict()        # a benchmark may also pass a dict or
+                                     # list of already-serialized specs
+    payload.setdefault("spec", spec)
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=float)
     return path

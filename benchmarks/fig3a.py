@@ -1,16 +1,14 @@
 """Fig 3a: application-interference speedup vs beacon threshold dn_th,
 for several cluster counts k (m=256, n=100 per app, Poisson lambda=7999).
 
-Runs on the batched sweep engine (repro.core.sweep): per cluster count k,
-the full (dn_th x seed) grid is one vmapped run — one compilation per
-(m, k) shape."""
+Runs as ONE declarative experiment (core/experiment.py): k is the
+static shape axis, (dn_th x seed) the traced grid — one XLA program per
+k, everything else free."""
 from __future__ import annotations
 
-import jax
 import numpy as np
 
-from repro.core import sweep as SW
-from repro.core import workloads as W
+from repro.core.experiment import ExperimentSpec, WorkloadSpec
 from repro.core.sim import SimParams
 
 from benchmarks.common import csv_row, save, timed
@@ -21,21 +19,22 @@ THRESHOLDS = (1, 2, 4, 8, 16, 32)
 
 def run(verbose: bool = True, ks=KS, thresholds=THRESHOLDS,
         sim_len: float = 4e6, seeds=(1, 2)) -> dict:
+    spec = ExperimentSpec(
+        base=SimParams(m=256, n_childs=100, max_apps=512, queue_cap=2048),
+        shapes=tuple(ks),
+        knobs={"dn_th": thresholds},
+        workloads=(WorkloadSpec("interference", seeds=seeds),),
+        sim_len=sim_len)
+    frame, t_total = timed(spec.run)
+
     curves = {}
-    t_total = 0.0
-    compiles0 = SW.cache_size()
-    knobs = SW.knob_batch(dn_th=thresholds)
     for k in ks:
-        p = SimParams(m=256, k=k, n_childs=100, max_apps=512,
-                      queue_cap=2048)
-        wl = W.interference_batch(p, seeds=seeds, sim_len=sim_len)
-        st, dt = timed(lambda: jax.block_until_ready(
-            SW.sweep(p.shape, knobs, wl, sim_len)))
-        t_total += dt
-        row = SW.speedup(st, wl[2]).mean(axis=1)     # (B,) mean over seeds
+        # (B*S,) -> (B, S): knob-major, seed-minor point order
+        row = frame.speedup(k=k).reshape(len(thresholds),
+                                         len(seeds)).mean(axis=1)
         curves[str(k)] = {"dn_th": list(thresholds),
                           "speedup": [float(v) for v in row]}
-    n_compiles = SW.cache_size() - compiles0
+    n_compiles = frame.compiles
 
     s1 = np.mean(curves["1"]["speedup"]) if "1" in curves else None
     s16_th4 = (curves["16"]["speedup"][list(thresholds).index(4)]
@@ -61,7 +60,7 @@ def run(verbose: bool = True, ks=KS, thresholds=THRESHOLDS,
         "n_compiles": n_compiles,
         "compile_once_per_shape": n_compiles <= len(ks),
     }
-    save("fig3a", payload)
+    save("fig3a", payload, spec=spec)
     if verbose:
         i16 = f"{improvement_16:.2f}" if improvement_16 else "n/a"
         i256 = f"{improvement_256:.2f}" if improvement_256 else "n/a"

@@ -3,15 +3,13 @@
 Paper claim: at dn_th=4, k=32 transmits ~1.37x the beacons of k=16; a
 coarser threshold suppresses synchronization traffic.
 
-Runs on the batched sweep engine (repro.core.sweep): the whole threshold
-row for one k is a single vmapped run, so the simulator compiles exactly
-once per (m, k) shape instead of once per (k, dn_th) point."""
+Runs as ONE declarative experiment (core/experiment.py): the cluster
+counts are the static shape axis, the thresholds the traced knob axis —
+the planner compiles exactly one XLA program per k and the whole
+threshold row rides the traced axis for free."""
 from __future__ import annotations
 
-import jax
-
-from repro.core import sweep as SW
-from repro.core import workloads as W
+from repro.core.experiment import ExperimentSpec, WorkloadSpec
 from repro.core.sim import SimParams
 
 from benchmarks.common import csv_row, save, timed
@@ -22,20 +20,18 @@ THRESHOLDS = (1, 2, 4, 8, 16, 32)
 
 def run(verbose: bool = True, ks=KS, thresholds=THRESHOLDS,
         sim_len: float = 4e6, seed: int = 1) -> dict:
-    curves = {}
-    t_total = 0.0
-    compiles0 = SW.cache_size()
-    knobs = SW.knob_batch(dn_th=thresholds)
-    for k in ks:
-        p = SimParams(m=256, k=k, n_childs=100, max_apps=512,
-                      queue_cap=2048)
-        wl = W.interference_batch(p, seeds=(seed,), sim_len=sim_len)
-        st, dt = timed(lambda: jax.block_until_ready(
-            SW.sweep(p.shape, knobs, wl, sim_len)))
-        t_total += dt
-        row = SW.beacons(st)[:, 0].tolist()
-        curves[str(k)] = {"dn_th": list(thresholds), "beacons_tx": row}
-    n_compiles = SW.cache_size() - compiles0
+    spec = ExperimentSpec(
+        base=SimParams(m=256, n_childs=100, max_apps=512, queue_cap=2048),
+        shapes=tuple(ks),
+        knobs={"dn_th": thresholds},
+        workloads=(WorkloadSpec("interference", seeds=(seed,)),),
+        sim_len=sim_len)
+    frame, t_total = timed(spec.run)
+
+    curves = {str(k): {"dn_th": list(thresholds),
+                       "beacons_tx": frame.beacons_tx(k=k).tolist()}
+              for k in ks}
+    n_compiles = frame.compiles
 
     i4 = list(thresholds).index(4)
     ratio = (curves["32"]["beacons_tx"][i4] / curves["16"]["beacons_tx"][i4]
@@ -54,7 +50,7 @@ def run(verbose: bool = True, ks=KS, thresholds=THRESHOLDS,
         "n_compiles": n_compiles,
         "compile_once_per_shape": n_compiles <= len(ks),
     }
-    save("fig3b", payload)
+    save("fig3b", payload, spec=spec)
     if verbose:
         r = f"{ratio:.2f}" if ratio else "n/a"
         csv_row("fig3b_beacons", t_total * 1e6,

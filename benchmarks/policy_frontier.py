@@ -9,19 +9,20 @@ sweeps
     mapping policy x beacon policy x topology x (dn_th, T_b)
                    x scenario (interference / bursty / hotspot) x seed
 
-on the batched sweep engine — the policy pair and the topology are
-static axes (one XLA program per combination), the numeric knobs and
-workloads ride the traced/vmap axes for free — and emits every grid
-point plus the per-scenario Pareto-nondominated (beacons_tx,
-mean_response) sets to ``results/policy_frontier.json``.  The
-``dominant_pairs`` key records which (mapping, beacon, topology) triples
-survive on each scenario's frontier (ROADMAP: where do
-``staleness_weighted``/``hybrid`` dominate the paper's default pair?).
+declaratively (core/experiment.py): one ExperimentSpec per beacon
+policy — the beacon policy fixes which knob axes are alive (T_b is dead
+under ``threshold``, dn_th under ``periodic``; sweeping a dead knob
+would just duplicate grid points) — each carrying the full mapping x
+topology static axes and all three scenario WorkloadSpecs.  The planner
+compiles one XLA program per (mapping, beacon, topology) combination;
+knobs, seeds and scenarios ride the traced axes for free.
 
-The default ``min_search`` + ``threshold`` pair on the ``ideal`` fabric
-is additionally checked bitwise against a direct ``sim.run`` call, and
-the legacy ``frontier`` key still holds exactly the interference/ideal
-frontier so the BENCH trajectory series stays comparable.
+The ``dominant_pairs`` key records which (mapping, beacon, topology)
+triples survive on each scenario's frontier; the default ``min_search``
++ ``threshold`` pair on the ``ideal`` fabric is additionally checked
+bitwise against a direct ``sim.run`` call, and the legacy ``frontier``
+key still holds exactly the interference/ideal frontier so the BENCH
+trajectory series stays comparable.
 
 Usage:  PYTHONPATH=src python -m benchmarks.policy_frontier [--grid tiny]
 """
@@ -29,11 +30,11 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 import numpy as np
 
-from repro.core import sweep as SW
 from repro.core import workloads as W
+from repro.core.experiment import ExperimentSpec, WorkloadSpec
+from repro.core.metrics import mean_response
 from repro.core.policies import BEACON_POLICIES, MAPPING_POLICIES
 from repro.core.sim import SimParams, run as sim_run
 
@@ -65,34 +66,25 @@ GRIDS = {
 SCENARIOS = ("interference", "bursty", "hotspot")
 
 
-def _knobs_for(beacon: str, thresholds, periods):
-    """Per-policy knob grid: sweep only the parameters the policy reads
-    (T_b is dead under ``threshold``, dn_th under ``periodic`` — sweeping
-    a dead knob would just duplicate grid points)."""
+def _knob_axes(beacon: str, thresholds, periods) -> dict:
+    """Per-policy knob grid: sweep only the parameters the policy reads."""
     if beacon == "threshold":
-        return SW.knob_batch(dn_th=thresholds)
+        return {"dn_th": thresholds}
     if beacon == "periodic":
-        return SW.knob_batch(T_b=periods)
-    return SW.knob_product(dn_th=thresholds, T_b=periods)
+        return {"T_b": periods}
+    return {"dn_th": thresholds, "T_b": periods}
 
 
-def _scenario_workloads(g, p):
-    """(scenario, lane-metadata list, sweep-shaped workload) triples."""
-    out = []
-    lanes = [dict(pair_period=float(pp), seed=int(s))
-             for pp in g["pair_periods"] for s in g["seeds"]]
-    out.append(("interference", lanes,
-                W.interference_grid(p, pair_periods=g["pair_periods"],
-                                    seeds=g["seeds"],
-                                    sim_len=g["sim_len"])))
+def _scenario_specs(g) -> tuple:
+    """The scenario axis as declarative WorkloadSpecs (one spec, three
+    lanes of provenance-carrying workload generators)."""
     ss = g["scenario_seeds"]
-    out.append(("bursty", [dict(pair_period=None, seed=int(s)) for s in ss],
-                W.bursty_batch(p, seeds=ss, sim_len=g["sim_len"],
-                               **g["bursty"])))
-    out.append(("hotspot", [dict(pair_period=None, seed=int(s)) for s in ss],
-                W.hotspot_batch(p, seeds=ss, sim_len=g["sim_len"],
-                                **g["hotspot"])))
-    return out
+    return (
+        WorkloadSpec.make("interference", seeds=g["seeds"],
+                          pair_periods=tuple(g["pair_periods"])),
+        WorkloadSpec.make("bursty", seeds=ss, **g["bursty"]),
+        WorkloadSpec.make("hotspot", seeds=ss, **g["hotspot"]),
+    )
 
 
 def _pareto_mask(xs, ys):
@@ -114,37 +106,43 @@ def run(verbose: bool = True, grid: str = "default",
     sim_len = g["sim_len"]
     pair_periods, seeds = g["pair_periods"], g["seeds"]
     topologies = g["topologies"]
-    scenarios = _scenario_workloads(g, p)
+    scenarios = _scenario_specs(g)
 
-    rows = []
+    # one spec per beacon policy (its knob grid), each spanning the full
+    # mapping x topology x scenario space
+    specs, frames = {}, {}
     t_total = 0.0
+    for beacon in beacons:
+        spec = ExperimentSpec(
+            base=p,
+            policies=tuple((m, beacon) for m in mappings),
+            topologies=tuple(topologies),
+            knobs=_knob_axes(beacon, g["thresholds"], g["periods"]),
+            workloads=scenarios,
+            sim_len=sim_len)
+        frame, dt = timed(spec.run)
+        t_total += dt
+        specs[beacon], frames[beacon] = spec, frame
+
+    # flatten to the historical row schema, in the historical order
+    # (mapping outermost, then beacon, then topology, then scenario)
+    rows = []
+    frame_rows = {b: frames[b].rows() for b in beacons}
     for mapping in mappings:
         for beacon in beacons:
-            knobs = _knobs_for(beacon, g["thresholds"], g["periods"])
-            pol = SW.SimPolicy(mapping=mapping, beacon=beacon)
-            th = np.asarray(knobs.dn_th)
-            tb = np.asarray(knobs.T_b)
-            for topology in topologies:
-                for scenario, lanes, wl in scenarios:
-                    st, dt = timed(lambda: jax.tree.map(
-                        np.asarray, SW.sweep(p.shape, knobs, wl, sim_len,
-                                             policy=pol,
-                                             topology=topology)))
-                    t_total += dt
-                    mresp = SW.mean_response(st)        # (B, S)
-                    btx = SW.beacons(st)                # (B, S)
-                    for i in range(btx.shape[0]):
-                        for j in range(btx.shape[1]):
-                            rows.append({
-                                "mapping": mapping, "beacon": beacon,
-                                "topology": topology, "scenario": scenario,
-                                "dn_th": int(th[i]), "T_b": float(tb[i]),
-                                "pair_period": lanes[j]["pair_period"],
-                                "seed": lanes[j]["seed"],
-                                "beacons_tx": int(btx[i, j]),
-                                "mean_response": float(mresp[i, j]),
-                                "dropped": int(st["dropped"][i, j]),
-                            })
+            for r in frame_rows[beacon]:
+                if r["mapping"] != mapping:
+                    continue
+                mr = r["mean_response"]
+                rows.append({
+                    "mapping": mapping, "beacon": beacon,
+                    "topology": r["topology"], "scenario": r["workload"],
+                    "dn_th": int(r["dn_th"]), "T_b": float(r["T_b"]),
+                    "pair_period": r["pair_period"], "seed": r["seed"],
+                    "beacons_tx": int(r["beacons_tx"]),
+                    "mean_response": float("nan") if mr is None else mr,
+                    "dropped": int(r["dropped"]),
+                })
 
     # Bitwise anchor: the default pair on the default fabric reproduces a
     # direct sim.run call
@@ -162,9 +160,9 @@ def run(verbose: bool = True, grid: str = "default",
                   and r["dn_th"] == int(g["thresholds"][0])
                   and r["pair_period"] == float(pair_periods[0])
                   and r["seed"] == int(seeds[0]))
-    # same mean_response code path as the sweep rows, so float equality
+    # same mean_response code path as the frame rows, so float equality
     # really is a bitwise check of the underlying app_done/app_arrive
-    mr0 = float(SW.mean_response(
+    mr0 = float(mean_response(
         {"app_done": np.asarray(st0["app_done"])[None, None],
          "app_arrive": np.asarray(st0["app_arrive"])[None, None]})[0, 0])
     default_bitwise = (anchor["beacons_tx"] == int(st0["beacons_tx"])
@@ -201,6 +199,8 @@ def run(verbose: bool = True, grid: str = "default",
                       key=lambda r: r["beacons_tx"])
     frontier_pairs = {(r["mapping"], r["beacon"]) for r in frontier}
 
+    n_compiles = sum(f.compiles for f in frames.values())
+    expected = sum(f.expected_programs for f in frames.values())
     payload = {
         "grid": grid,
         "rows": rows,
@@ -212,6 +212,7 @@ def run(verbose: bool = True, grid: str = "default",
         "meta": topology_meta(topologies=list(topologies), grid=grid),
         "n_policy_combos": len(mappings) * len(beacons),
         "n_points": len(rows),
+        "n_compiles": n_compiles,
         "claim_default_bitwise_vs_run": bool(default_bitwise),
         "claim_frontier_nonempty": len(frontier) > 0,
         "claim_all_combos_completed": all(
@@ -221,8 +222,12 @@ def run(verbose: bool = True, grid: str = "default",
         "claim_frontier_spans_policies": len(frontier_pairs) >= 2,
         "claim_all_scenario_frontiers_nonempty": all(
             len(v) > 0 for v in frontier_by_scenario.values()),
+        # compile-aware planner accounting: one XLA program per
+        # (mapping, beacon, topology) group
+        "claim_one_program_per_group": n_compiles <= expected,
     }
-    save("policy_frontier", payload)
+    save("policy_frontier", payload,
+         spec={b: s.to_dict() for b, s in specs.items()})
     if verbose:
         csv_row("policy_frontier", t_total * 1e6,
                 f"combos={payload['n_policy_combos']}"

@@ -5,15 +5,14 @@
   k=16  this work                    paper: 78.7
   k=256 fully distributed (Isonet)   paper: 44.3
 
-Runs on the batched sweep engine: per k, all seeds execute in one vmapped
-run (single compilation per (m, k) shape)."""
+Runs as ONE declarative experiment (core/experiment.py): k is the
+static shape axis, the seeds the traced lane axis — one XLA program
+per k."""
 from __future__ import annotations
 
-import jax
 import numpy as np
 
-from repro.core import sweep as SW
-from repro.core import workloads as W
+from repro.core.experiment import ExperimentSpec, WorkloadSpec
 from repro.core.sim import SimParams
 
 from benchmarks.common import csv_row, save, timed
@@ -22,17 +21,17 @@ PAPER = {1: 28.1, 8: 73.5, 16: 78.7, 256: 44.3}
 
 
 def run(verbose: bool = True, sim_len: float = 4e6, seeds=(1, 2, 3)) -> dict:
+    spec = ExperimentSpec(
+        base=SimParams(m=256, n_childs=100, max_apps=512, queue_cap=2048),
+        shapes=tuple(PAPER),
+        knobs={"dn_th": 4},
+        workloads=(WorkloadSpec("interference", seeds=seeds),),
+        sim_len=sim_len)
+    frame, t_total = timed(spec.run)
+
     rows = {}
-    t_total = 0.0
-    knobs = SW.knob_batch(dn_th=4)
     for k in PAPER:
-        p = SimParams(m=256, k=k, n_childs=100, max_apps=512,
-                      queue_cap=2048)
-        wl = W.interference_batch(p, seeds=seeds, sim_len=sim_len)
-        st, dt = timed(lambda: jax.block_until_ready(
-            SW.sweep(p.shape, knobs, wl, sim_len)))
-        t_total += dt
-        vals = SW.speedup(st, wl[2])[0]               # (S,) over seeds
+        vals = frame.speedup(k=k)                     # (S,) over seeds
         rows[str(k)] = {"speedup": float(np.mean(vals)),
                         "std": float(np.std(vals)),
                         "paper": PAPER[k]}
@@ -51,7 +50,7 @@ def run(verbose: bool = True, sim_len: float = 4e6, seeds=(1, 2, 3)) -> dict:
                 "period (calibrated, see workloads.interference); the "
                 "paper's claim is the ORDERING and the ~2.8x ratio",
     }
-    save("table5", payload)
+    save("table5", payload, spec=spec)
     if verbose:
         csv_row("table5_comparison", t_total * 1e6,
                 f"k16/k1={ours_ratio:.2f}(paper {paper_ratio:.2f})"

@@ -19,25 +19,27 @@ configuration pays ``comm`` for the all-to-all beacon/spawn traffic; a
 clustered configuration (1 < k < m) minimizes the total on the paper's
 own ``hier_tree`` fabric.  Per-receiver beacon skew (``bcn_skew_*``)
 is reported per topology — zero under ``ideal`` by construction,
-strictly positive under the non-ideal fabrics (the heterogeneity that
-feeds the ``staleness_weighted`` policy).
+strictly positive under the non-ideal fabrics.
 
-Grid tiers (schema v3, benchmarks/README.md):
+The whole (k x topology x seed) grid is TWO declarative experiments
+(core/experiment.py): one spanning every k > 1 across every fabric, and
+a single-fabric spec for k=1 (with one cluster no inter-GMN traffic
+exists, so every fabric is identical — the other fabrics' rows are
+replicas).  The planner compiles one XLA program per (shape incl.
+queue_cap/queue_impl, topology) group; seq dispatch times every lane
+individually, so the per-seed warm/marginal cost fields survive the
+port.  The tree-vs-linear bitwise gate rides the declarative
+``queue_impls`` axis of a third tiny spec.
+
+Grid tiers (schema v4, benchmarks/README.md):
 
   tiny        CI smoke at m=16, every fabric, linear queue.
   paper_tiny  CI proxy for the paper grid at m=64 with the tournament-
-              tree queue (``queue_impl="tree"``, core/eventq.py): gates
-              the tree-vs-linear bitwise claim and an events/sec floor
-              at a scale GitHub runners finish in minutes.
+              tree queue (``queue_impl="tree"``, core/eventq.py).
   default     the PR-3 m=64 saturation-regime grid (c_s raised
               uniformly), unchanged for trajectory continuity.
   paper       the true paper scale: m=256, k ∈ {1, 16, 32, 256} across
-              ideal/hier_tree/mesh2d.  The m=256/k=256 points on
-              non-ideal fabrics are exactly what ROADMAP.md called
-              blocked on the O(queue_cap) argmin: every beacon fans out
-              into k-1 = 255 BEACON_RX events, so this tier runs on the
-              tournament-tree queue and records events/sec and
-              marginal cost per grid point next to PR 1's numbers.
+              ideal/hier_tree/mesh2d on the tournament-tree queue.
 
 Every row reports ``events`` / ``events_per_sec`` / ``wall_s`` (total
 for the point, first seed carries the XLA compile) and
@@ -50,12 +52,12 @@ Usage:  PYTHONPATH=src python -m benchmarks.topology_frontier \
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
-import jax
 import numpy as np
 
-from repro.core import sweep as SW
 from repro.core import workloads as W
+from repro.core.experiment import ExperimentSpec, WorkloadSpec
 from repro.core.sim import SimParams
 from repro.core.sim import run as sim_run
 from repro.core.transport import TOPOLOGIES
@@ -93,8 +95,7 @@ GRIDS = {
     # the true paper scale (Sec 5 / Table 5): m=256 with the calibrated
     # interference stimulus; k=256 is the fully-distributed extreme whose
     # 255-wide beacon fan-out (hundreds of thousands of BEACON_RX
-    # events through a 32k-slot queue) is the point the linear argmin
-    # could not reach on CPU
+    # events through a 32k-slot queue) needs the tournament-tree queue
     "paper": dict(m=256, ks=(1, 16, 32, 256), n_childs=100, max_apps=64,
                   queue_cap={256: 32768}, default_queue_cap=8192,
                   c_s=8.0, dn_th=4, sim_len=1e6,
@@ -104,37 +105,11 @@ GRIDS = {
 }
 
 
-def _point(p, knobs, topo, combos, sim_len):
-    """Run one (k, topology) grid point seed-by-seed so the warm runs are
-    individually timed.  Returns (stacked state with (B, S, ...) leaves,
-    wall_s, marginal_wall_s)."""
-    sts, dts = [], []
-    for pp, seed in combos:
-        wl = W.interference_batch(p, seeds=(seed,), sim_len=sim_len,
-                                  pair_period=pp)
-        # np.asarray inside timed(): sweep returns unrealized async jax
-        # arrays, so timing must include materialization
-        st, dt = timed(lambda: jax.tree.map(
-            np.asarray, SW.sweep(p.shape, knobs, wl, sim_len,
-                                 policy=SW.SimPolicy(), topology=topo)))
-        sts.append(st)
-        dts.append(dt)
-    st = jax.tree.map(lambda *leaves: np.concatenate(leaves, axis=1), *sts)
-    # the first seed's run carries the XLA compile for this static combo;
-    # the warm remainder is the marginal cost of one more grid point.  A
-    # single-combo grid re-times one warm repeat (results are
-    # deterministic and discarded) so marginal/warm fields always mean
-    # steady state, never compile
-    if len(dts) > 1:
-        marginal = float(np.mean(dts[1:]))
-    else:
-        pp, seed = combos[0]
-        wl = W.interference_batch(p, seeds=(seed,), sim_len=sim_len,
-                                  pair_period=pp)
-        _, marginal = timed(lambda: jax.tree.map(
-            np.asarray, SW.sweep(p.shape, knobs, wl, sim_len,
-                                 policy=SW.SimPolicy(), topology=topo)))
-    return st, float(np.sum(dts)), marginal
+def _shape_for(g, k):
+    return SimParams(m=g["m"], k=k, n_childs=g["n_childs"],
+                     max_apps=g["max_apps"], queue_impl=g["queue_impl"],
+                     queue_cap=g["queue_cap"].get(k, g["default_queue_cap"])
+                     ).shape
 
 
 def run(verbose: bool = True, grid: str = "default",
@@ -148,51 +123,88 @@ def run(verbose: bool = True, grid: str = "default",
                          "fabric(s) in `topologies`")
     m, qi = g["m"], g["queue_impl"]
     clustered_ks = [k for k in g["ks"] if 1 < k < m]
-    combos = [(pp, s) for pp in g["pair_periods"] for s in g["seeds"]]
-    knobs = SW.knob_batch(dn_th=g["dn_th"], c_s=g["c_s"])
+    n_lanes = len(g["pair_periods"]) * len(g["seeds"])
+    workload = WorkloadSpec.make("interference", seeds=g["seeds"],
+                                 pair_periods=tuple(g["pair_periods"]))
+    knobs = {"dn_th": g["dn_th"], "c_s": g["c_s"]}
+
+    # with a single cluster no inter-GMN traffic exists, so every fabric
+    # produces identical results: run k=1 on the first fabric only and
+    # replicate its row across the rest
+    specs = []
+    if 1 in g["ks"]:
+        specs.append(ExperimentSpec(shapes=(_shape_for(g, 1),),
+                                    topologies=topologies[:1],
+                                    knobs=knobs, workloads=(workload,),
+                                    sim_len=g["sim_len"], mode="seq"))
+    ks_multi = tuple(k for k in g["ks"] if k > 1)
+    if ks_multi:
+        specs.append(ExperimentSpec(
+            shapes=tuple(_shape_for(g, k) for k in ks_multi),
+            topologies=topologies, knobs=knobs, workloads=(workload,),
+            sim_len=g["sim_len"], mode="seq"))
+
+    frames, t_total = [], 0.0
+    for spec in specs:
+        frame, dt = timed(spec.run)
+        frames.append(frame)
+        t_total += dt
+    # single-lane grids: the lone lane of each group carried the XLA
+    # compile, so re-run the whole (now warm) spec once to measure the
+    # steady-state marginal cost.  Results are deterministic and
+    # discarded, and the re-run stays OFF t_total — the historical
+    # series times only the actually-reported points
+    warm_lane = {}
+    if n_lanes == 1:
+        for spec in specs:
+            wf = spec.run()
+            for gr in wf.groups:
+                key = (gr.combo.shape.k, gr.combo.topology.kind)
+                warm_lane[key] = list(gr.lane_wall_s)
+
     rows = []
-    t_total = 0.0
     events_run = 0                # events from actually-run points only
                                   # (k=1 replicas excluded)
-    for k in g["ks"]:
-        p = SimParams(m=m, k=k, n_childs=g["n_childs"],
-                      max_apps=g["max_apps"], queue_impl=qi,
-                      queue_cap=g["queue_cap"].get(k, g["default_queue_cap"]))
-        # with a single cluster no inter-GMN traffic exists, so every
-        # fabric produces identical results: run once, replicate the row
-        k_topos = topologies if k > 1 else topologies[:1]
-        k_rows = []
-        for topo in k_topos:
-            st, wall, marginal = _point(p, knobs, topo, combos, g["sim_len"])
-            t_total += wall
+    for frame in frames:
+        for gr in frame.groups:
+            k, topo = gr.combo.shape.k, gr.combo.topology.kind
+            st = gr.state
             events = int(np.asarray(st["events_processed"]).sum())
             events_run += events
-            comm = SW.mgmt_latency(st)[0]             # (S,)
-            proc = SW.mgmt_proc(st)[0]
-            msgs = SW.mgmt_msgs(st)[0]
-            skew_max = np.asarray(st["bcn_skew_max"], np.float64)[0]
-            k_rows.append({
+            comm = np.asarray(st["mgmt_latency"], np.float64)[0]   # (S,)
+            proc = np.asarray(st["mgmt_proc"], np.float64)[0]
+            msgs = np.asarray(st["mgmt_msgs"], np.int64)[0]
+            wall = float(gr.wall_s)
+            lane_walls = list(gr.lane_wall_s)
+            warm = warm_lane.get((k, topo), lane_walls[1:])
+            marginal = float(np.mean(warm))
+            rows.append({
                 "k": k, "topology": topo, "queue_impl": qi,
-                "mean_response": float(np.nanmean(SW.mean_response(st)[0])),
-                "beacons_tx": int(SW.beacons(st)[0].sum()),
-                "beacons_rx": int(SW.beacons_rx(st)[0].sum()),
+                "mean_response": float(np.nanmean(
+                    frame.mean_response(k=k, topology=topo))),
+                "beacons_tx": int(np.asarray(st["beacons_tx"]).sum()),
+                "beacons_rx": int(np.asarray(st["beacons_rx"]).sum()),
                 "mgmt_msgs": int(msgs.sum()),
                 "comm_latency": float(comm.sum()),
                 "proc_latency": float(proc.sum()),
                 "total_mgmt_latency": float((comm + proc).sum()),
                 "comm_per_msg": float(comm.sum() / max(msgs.sum(), 1)),
-                "bcn_skew_max": float(skew_max.max()),
-                "dropped": int(np.asarray(st["dropped"])[0].sum()),
+                "bcn_skew_max": float(
+                    np.asarray(st["bcn_skew_max"], np.float64).max()),
+                "dropped": int(np.asarray(st["dropped"]).sum()),
                 "events": events,
                 "events_per_sec": events / max(wall, 1e-9),
-                "warm_events_per_sec": events / len(combos)
+                "warm_events_per_sec": events / n_lanes
                 / max(marginal, 1e-9),
                 "wall_s": wall,
                 "marginal_wall_s": marginal,
             })
-        for topo in topologies[len(k_topos):]:
-            k_rows.append(dict(k_rows[0], topology=topo))
-        rows.extend(k_rows)
+    # replicate the fabric-invariant k=1 row across the unrun fabrics,
+    # keeping the historical row order (all k=1 rows first)
+    if 1 in g["ks"]:
+        k1 = next(r for r in rows if r["k"] == 1)
+        at = rows.index(k1) + 1
+        rows[at:at] = [dict(k1, topology=topo) for topo in topologies[1:]]
 
     def row(k, topo):
         return next(r for r in rows if r["k"] == k and r["topology"] == topo)
@@ -211,27 +223,27 @@ def run(verbose: bool = True, grid: str = "default",
                    for topo in topologies if topo != "ideal"}
     ideal_skew_zero = row(clustered, "ideal")["bcn_skew_max"] == 0.0
 
-    # bitwise anchor: the ideal row's configuration reproduces a direct
+    # bitwise anchor: the ideal row's first lane reproduces a direct
     # (topology- and queue-default) sim.run — neither the transport
     # subsystem nor the tournament-tree queue is visible until opted into
     pd = SimParams(m=m, k=clustered, n_childs=g["n_childs"],
                    max_apps=g["max_apps"], c_s=g["c_s"], dn_th=g["dn_th"],
                    queue_cap=g["queue_cap"].get(clustered,
                                                 g["default_queue_cap"]))
-    pp0, seed0 = combos[0]
+    pp0, seed0 = g["pair_periods"][0], g["seeds"][0]
     wl0 = W.interference(pd, sim_len=g["sim_len"], pair_period=pp0,
                          seed=seed0)
     st0 = sim_run(pd, *wl0, g["sim_len"])
-    wl0b = W.interference_batch(pd, seeds=(seed0,), sim_len=g["sim_len"],
-                                pair_period=pp0)
-    stI = SW.sweep(pd.shape, knobs, wl0b, g["sim_len"], topology="ideal",
-                   queue_impl=qi)
+    mframe = frames[-1]
+    stI = mframe.state(k=clustered, topology="ideal")
     ideal_bitwise = bool(
         np.array_equal(np.asarray(stI["app_done"])[0, 0],
                        np.asarray(st0["app_done"]))
         and int(np.asarray(stI["beacons_tx"])[0, 0])
         == int(st0["beacons_tx"]))
 
+    n_compiles = sum(f.compiles for f in frames)
+    expected = sum(f.expected_programs for f in frames)
     payload = {
         "grid": grid,
         "rows": rows,
@@ -246,6 +258,8 @@ def run(verbose: bool = True, grid: str = "default",
             "marginal_s_per_point": PR1_MARGINAL_S_PER_POINT,
             "context": "m=256, 4e6 ticks, ideal fabric, linear queue "
                        "(CHANGES.md, PR 1)"},
+        "n_compiles": n_compiles,
+        "claim_one_program_per_group": n_compiles <= expected,
         "claim_ideal_bitwise_vs_run": ideal_bitwise,
         "claim_clustered_lowest_total_mgmt_latency": bool(clustered_wins),
         "claim_skew_heterogeneous_nonideal": bool(all(skew_hetero.values())),
@@ -255,19 +269,28 @@ def run(verbose: bool = True, grid: str = "default",
     }
 
     if qi == "tree":
-        # the tree queue's bitwise contract, exercised where it matters:
+        # the tree queue's bitwise contract, exercised where it matters —
         # a non-ideal fabric whose k-1 beacon fan-out stresses the bulk
-        # push, compared leaf-for-leaf against the linear golden anchor
-        stL = SW.sweep(pd.shape, knobs, wl0b, g["sim_len"],
-                       topology="hier_tree", queue_impl="linear")
-        stT = SW.sweep(pd.shape, knobs, wl0b, g["sim_len"],
-                       topology="hier_tree", queue_impl="tree")
+        # push — through the declarative queue_impls axis: one spec, two
+        # static event-queue structures, leaf-for-leaf equality
+        qspec = ExperimentSpec(
+            shapes=(dataclasses.replace(_shape_for(g, clustered),
+                                        queue_impl="linear"),),
+            queue_impls=("linear", "tree"), topologies=("hier_tree",),
+            knobs=knobs,
+            workloads=(WorkloadSpec.make("interference", seeds=(seed0,),
+                                         pair_periods=(pp0,)),),
+            sim_len=g["sim_len"], mode="seq")
+        qframe = qspec.run()
+        stL = qframe.state(queue_impl="linear")
+        stT = qframe.state(queue_impl="tree")
         payload["claim_tree_matches_linear_bitwise"] = bool(all(
             np.array_equal(np.asarray(stL[key]), np.asarray(stT[key]))
             for key in ("app_done", "app_arrive", "beacons_tx",
                         "beacons_rx", "events_processed", "dropped")))
 
-    save("topology_frontier", payload)
+    save("topology_frontier", payload,
+         spec=[s.to_dict() for s in specs])
     if verbose:
         csv_row("topology_frontier", t_total * 1e6,
                 f"clustered_best={clustered_wins}"

@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.core import analytic as A
 from repro.core import workloads as W
-from repro.core.sim import SimParams, run as sim_run, speedup
+from repro.core.sim import SimParams, response_times, run as sim_run, speedup
 
 PAPER_T5 = {1: 28.1, 8: 73.5, 16: 78.7, 256: 44.3}
 
@@ -37,7 +37,8 @@ def main():
                       queue_cap=2048)
         arr, gmns, lens = W.interference(p, sim_len=sim_len, seed=1)
         st = sim_run(p, arr, gmns, lens, sim_len)
-        s, n = speedup(st, arr, lens)
+        s = float(speedup(st, lens))
+        n = int(response_times(st)[1].sum())
         ours[k] = s
         print(f"  k={k:3d}: ours={s:6.1f}  paper={PAPER_T5[k]:5.1f}  "
               f"(apps={n}, beacons={int(st['beacons_tx'])})")

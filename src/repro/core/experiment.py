@@ -1,0 +1,704 @@
+"""Unified declarative experiment API over the TLM design space.
+
+The paper's contribution is a *design-space analysis* — centralized vs
+clustered vs distributed, swept over cluster count, beacon thresholds
+and fabric — but the sweep surface grew one ad-hoc entry point per axis
+as the axes landed (``sweep_policies``, ``sweep_topologies``, the
+``queue_impl`` kwarg, hand-rolled per-benchmark loops over k).  This
+module replaces all of that with one declarative object
+(DESIGN.md §12):
+
+    spec = ExperimentSpec(
+        base=SimParams(m=256, n_childs=100, max_apps=512, queue_cap=2048),
+        shapes=(1, 8, 16, 32, 256),              # static: cluster counts
+        policies=(("min_search", "threshold"),), # static: SimPolicy axis
+        topologies=("ideal", "hier_tree"),       # static: Topology axis
+        knobs={"dn_th": (1, 2, 4, 8, 16, 32)},   # traced: knob grid
+        workloads=(WorkloadSpec("interference", seeds=(1, 2)),),
+        sim_len=4e6)
+    frame = spec.run()                           # ResultFrame
+    frame.mean_response()                        # (N,) named accessors
+    frame.col("k"), frame.col("dn_th")           # aligned coordinates
+
+The **planner** (``spec.plan()``) partitions the point set into
+*static-combo groups* — one per distinct ``(SimShape incl. queue_impl,
+SimPolicy, Topology)`` — and each group compiles exactly one XLA
+program (guarded by ``sweep.cache_size()`` deltas;
+tests/test_experiment.py).  Everything inside a group (knob configs,
+seeds, workload scenarios) rides the traced/vmap axes for free.
+
+**Dispatch** executes each group with one of three strategies, all
+bitwise identical (they run the very same traced computation):
+
+  seq    warm replays of the single-config program, one compile per
+         group — the CPU path (per-lane wall-clock recorded).
+  vmap   one batched XLA program per group — the accelerator path.
+  pmap   groups round-robined over devices via committed inputs, the
+         whole frontier dispatched asynchronously and gathered once —
+         the multi-device path (closes the ROADMAP "policy/topology
+         axes on accelerator sweeps" item).  Falls back to seq/vmap
+         when ``jax.device_count() == 1``.
+
+The returned :class:`ResultFrame` is columnar — every coordinate
+(static axis value, knob value, workload lane) and every metric is a
+flat aligned column over all points — and serializes directly to the
+benchmarks' results-JSON schema v4 with the spec embedded as
+provenance (``frame.to_payload()``; benchmarks/README.md).
+
+Bitwise contract with the legacy entry points: a group executes through
+the very same jitted programs ``sweep`` uses (``sim._run`` in seq mode,
+``sweep._sweep`` in vmap/pmap mode) with identically-constructed
+inputs, so every frozen golden (the PR-2 grid, the fig3b spot sha, the
+tree==linear claims) reproduces bitwise through ``ExperimentSpec.run()``
+(tests/test_experiment.py), and ``sweep_policies``/``sweep_topologies``
+survive as thin deprecated shims over this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics as M
+from repro.core import workloads as W
+from repro.core.eventq import QUEUE_IMPLS
+from repro.core.policies import SimPolicy
+from repro.core.sim import SimKnobs, SimParams, SimShape, _run
+from repro.core.transport import Topology
+
+__all__ = ["WorkloadSpec", "ExperimentSpec", "ExperimentPlan", "StaticCombo",
+           "ResultFrame", "spec_from_dict", "SPEC_VERSION"]
+
+SPEC_VERSION = 1
+MODES = ("auto", "seq", "vmap", "pmap")
+WORKLOAD_KINDS = ("interference", "bursty", "hotspot", "independent", "raw")
+
+KNOB_FIELDS = SimKnobs._fields          # (c_b, c_s, c_join, dn_th, T_b, c_hop)
+
+
+# --------------------------------------------------------------------------
+# Workload axis
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True, eq=False)
+class WorkloadSpec:
+    """One traced workload/scenario axis entry, declaratively.
+
+    A spec is *regenerated per shape* (arrival GMNs depend on k, array
+    sizes on max_apps/n_childs), which is what the benchmarks always did
+    by hand; the generator params are recorded so the spec serializes as
+    provenance.  ``kind="raw"`` wraps pre-built ``(arrivals (S, A),
+    gmns (S, A), lengths (S, A, n))`` arrays for the legacy shims — raw
+    arrays are shape-locked and serialize as shapes + sha256 only.
+    """
+    kind: str = "interference"
+    seeds: tuple = (0,)
+    params: tuple = ()                  # sorted (name, value) pairs
+    arrays: tuple | None = None         # kind="raw" only
+
+    def __post_init__(self):
+        if self.kind not in WORKLOAD_KINDS:
+            raise ValueError(f"unknown workload kind {self.kind!r}; "
+                             f"choose from {WORKLOAD_KINDS}")
+        object.__setattr__(self, "seeds", tuple(int(s) for s in self.seeds))
+        params = self.params
+        if isinstance(params, dict):
+            params = tuple(sorted(params.items()))
+        object.__setattr__(self, "params", tuple(
+            (str(k), tuple(v) if isinstance(v, (list, tuple)) else v)
+            for k, v in params))
+
+    @classmethod
+    def make(cls, kind: str = "interference", seeds=(0,), **params):
+        return cls(kind=kind, seeds=seeds, params=tuple(sorted(params.items())))
+
+    @classmethod
+    def raw(cls, workload) -> "WorkloadSpec":
+        arr, gmns, lens = (np.asarray(a) for a in workload)
+        if arr.ndim != 2 or lens.ndim != 3:
+            raise ValueError("raw workload needs a leading lane axis (S,): "
+                             "arrivals (S, A), gmns (S, A), lengths (S, A, n)")
+        return cls(kind="raw", seeds=(), arrays=(arr, gmns, lens))
+
+    @property
+    def param_dict(self) -> dict:
+        return dict(self.params)
+
+    def lane_count(self) -> int:
+        """Number of S lanes this spec expands to (known without building)."""
+        if self.kind == "raw":
+            return int(self.arrays[0].shape[0])
+        pps = self.param_dict.get("pair_periods")
+        if self.kind == "interference" and pps is not None:
+            return len(pps) * len(self.seeds)
+        return len(self.seeds)
+
+    def build(self, shape: SimShape, sim_len: float):
+        """Materialize ``(lanes, (arrivals, gmns, lengths))`` for one
+        static shape.  ``lanes`` is per-S metadata (seed, pair_period)
+        that becomes ResultFrame coordinate columns."""
+        prm = self.param_dict
+        if self.kind == "raw":
+            lanes = [{"workload": "raw", "seed": None, "pair_period": None}
+                     for _ in range(self.arrays[0].shape[0])]
+            return lanes, self.arrays
+        if self.kind == "interference":
+            pps = prm.pop("pair_periods", None)
+            if pps is not None:
+                wl = W.interference_grid(shape, pair_periods=pps,
+                                         seeds=self.seeds, sim_len=sim_len,
+                                         **prm)
+                lanes = [{"workload": self.kind, "seed": s,
+                          "pair_period": float(pp)}
+                         for pp in pps for s in self.seeds]
+            else:
+                wl = W.interference_batch(shape, seeds=self.seeds,
+                                          sim_len=sim_len, **prm)
+                pp = prm.get("pair_period")
+                if pp is None:
+                    pp = W.DEFAULT_PAIR_PERIOD
+                lanes = [{"workload": self.kind, "seed": s,
+                          "pair_period": float(pp)} for s in self.seeds]
+            return lanes, wl
+        if self.kind == "bursty":
+            wl = W.bursty_batch(shape, seeds=self.seeds, sim_len=sim_len,
+                                **prm)
+        elif self.kind == "hotspot":
+            wl = W.hotspot_batch(shape, seeds=self.seeds, sim_len=sim_len,
+                                 **prm)
+        else:                                           # independent
+            wl = W.independent_batch(shape, seeds=self.seeds, **prm)
+        lanes = [{"workload": self.kind, "seed": s, "pair_period": None}
+                 for s in self.seeds]
+        return lanes, wl
+
+    def to_dict(self) -> dict:
+        d = {"kind": self.kind, "seeds": list(self.seeds),
+             "params": {k: (list(v) if isinstance(v, tuple) else v)
+                        for k, v in self.params}}
+        if self.arrays is not None:
+            h = hashlib.sha256()
+            for a in self.arrays:
+                h.update(np.ascontiguousarray(a).tobytes())
+            d["raw"] = {"shapes": [list(a.shape) for a in self.arrays],
+                        "sha256": h.hexdigest()}
+        return d
+
+
+# --------------------------------------------------------------------------
+# Planner
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StaticCombo:
+    """One static-combo group: exactly one XLA program compiles per
+    distinct value (``queue_impl`` is folded into ``shape``)."""
+    shape: SimShape
+    policy: SimPolicy
+    topology: Topology
+
+    def coords(self) -> dict:
+        return {"m": self.shape.m, "k": self.shape.k,
+                "n_childs": self.shape.n_childs,
+                "queue_cap": self.shape.queue_cap,
+                "max_apps": self.shape.max_apps,
+                "queue_impl": self.shape.queue_impl,
+                "mapping": self.policy.mapping,
+                "beacon": self.policy.beacon,
+                "topology": self.topology.kind}
+
+
+@dataclass(frozen=True)
+class ExperimentPlan:
+    """The compile-aware partition of a spec's point set.
+
+    ``combos`` is the minimal static-combo grouping: the Cartesian
+    product of the spec's static axes, deduplicated order-preservingly —
+    no two groups share a ``(shape, policy, topology)`` value, so the
+    number of XLA compilations is exactly :meth:`expected_programs`
+    on a fresh cache (DESIGN.md §12).
+    """
+    spec: "ExperimentSpec"
+    combos: tuple
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.combos)
+
+    def resolve_mode(self, mode: str | None = None) -> str:
+        """Dispatch matrix (DESIGN.md §12): auto picks seq on CPU and
+        vmap on accelerators; pmap needs >1 device and falls back to the
+        auto choice cleanly on single-device backends."""
+        mode = mode or self.spec.mode
+        if mode not in MODES:
+            raise ValueError(f"unknown mode {mode!r}; choose from {MODES}")
+        if mode == "pmap" and jax.device_count() <= 1:
+            mode = "auto"
+        if mode == "auto":
+            mode = "seq" if jax.default_backend() == "cpu" else "vmap"
+        return mode
+
+    def expected_programs(self, mode: str | None = None) -> int:
+        """XLA programs a fresh cache compiles executing this plan:
+        one per group in seq mode; in vmap/pmap mode the batched program
+        is additionally specialized on the lane count S, so scenarios
+        with distinct lane counts each compile once per group."""
+        mode = self.resolve_mode(mode)
+        if mode == "seq":
+            return self.n_groups
+        lane_shapes = {w.lane_count() for w in self.spec.workloads}
+        return self.n_groups * len(lane_shapes)
+
+
+# --------------------------------------------------------------------------
+# The spec
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True, eq=False)
+class ExperimentSpec:
+    """One declarative object for every design-space axis.
+
+    Static axes (each value = its own XLA program; the planner groups
+    by them):
+
+      shapes       SimShape values; also accepts SimParams (its .shape)
+                   or a bare int k (``base``'s shape with k replaced).
+                   None -> (base.shape,).
+      policies     SimPolicy values or (mapping, beacon) tuples.
+                   None -> (base.policy,).
+      topologies   Topology values or kind strings.  None -> (base.topo,).
+      queue_impls  event-queue structures crossed with ``shapes``
+                   (folded into each group's SimShape).  None keeps each
+                   shape's own ``queue_impl``.
+
+    Traced axes (ride inside each group's compiled program):
+
+      knobs        SimKnobs with a leading (B,) axis, or a dict of knob
+                   axes expanded Cartesian-product style
+                   (``{"dn_th": (1, 2, 4), "c_s": (8.0,)}``).
+                   None -> one config from ``base``.
+      workloads    WorkloadSpec tuple — the scenario/seed axis.
+
+    ``run()`` plans, dispatches and returns a :class:`ResultFrame`.
+    """
+    base: SimParams = SimParams()
+    shapes: tuple | None = None
+    policies: tuple | None = None
+    topologies: tuple | None = None
+    queue_impls: tuple | None = None
+    knobs: object = None
+    workloads: tuple = (WorkloadSpec(),)
+    sim_len: float = 1e7
+    mode: str = "auto"
+
+    def __post_init__(self):
+        base = self.base
+        set_ = lambda k, v: object.__setattr__(self, k, v)
+
+        shapes = self.shapes if self.shapes is not None else (base.shape,)
+        set_("shapes", tuple(
+            dataclasses.replace(base.shape, k=int(s))
+            if isinstance(s, (int, np.integer))
+            else s.shape if isinstance(s, SimParams) else s
+            for s in _as_tuple(shapes)))
+
+        pols = self.policies if self.policies is not None else (base.policy,)
+        set_("policies", tuple(
+            p if isinstance(p, SimPolicy) else SimPolicy(*p)
+            for p in _as_tuple(pols)))
+
+        topos = self.topologies if self.topologies is not None \
+            else (base.topo,)
+        set_("topologies", tuple(
+            Topology(t) if isinstance(t, str) else t
+            for t in _as_tuple(topos)))
+
+        if self.queue_impls is not None:
+            qis = tuple(_as_tuple(self.queue_impls))
+            for qi in qis:
+                if qi not in QUEUE_IMPLS:
+                    raise ValueError(f"unknown queue_impl {qi!r}; "
+                                     f"choose from {QUEUE_IMPLS}")
+            set_("queue_impls", qis)
+
+        knobs = self.knobs
+        if knobs is None:
+            knobs = {}
+        if isinstance(knobs, dict):
+            defaults = {f: getattr(base, f) for f in KNOB_FIELDS}
+            unknown = set(knobs) - set(KNOB_FIELDS)
+            if unknown:
+                raise ValueError(f"unknown knob axes {sorted(unknown)}; "
+                                 f"choose from {KNOB_FIELDS}")
+            from repro.core import sweep as SW
+            knobs = SW.knob_product(**{
+                f: np.atleast_1d(knobs.get(f, defaults[f]))
+                for f in KNOB_FIELDS})
+        if knobs.dn_th.ndim != 1:
+            raise ValueError("knobs need a leading batch axis (B,); "
+                             "pass a dict of axes or knob_batch/knob_product")
+        set_("knobs", knobs)
+
+        wls = self.workloads
+        if isinstance(wls, WorkloadSpec):
+            wls = (wls,)
+        set_("workloads", tuple(wls))
+        if not self.workloads:
+            raise ValueError("need at least one WorkloadSpec")
+        set_("sim_len", float(self.sim_len))
+        if self.mode not in MODES:
+            raise ValueError(f"unknown mode {self.mode!r}; "
+                             f"choose from {MODES}")
+
+    # -- planner ----------------------------------------------------------
+
+    def plan(self) -> ExperimentPlan:
+        combos = []
+        for shape in self.shapes:
+            qis = self.queue_impls or (shape.queue_impl,)
+            for qi in qis:
+                sh = shape if shape.queue_impl == qi \
+                    else dataclasses.replace(shape, queue_impl=qi)
+                for pol in self.policies:
+                    for topo in self.topologies:
+                        combos.append(StaticCombo(sh, pol, topo))
+        return ExperimentPlan(self, tuple(dict.fromkeys(combos)))
+
+    # -- execution --------------------------------------------------------
+
+    def run(self, mode: str | None = None) -> "ResultFrame":
+        from repro.core import sweep as SW
+        plan = self.plan()
+        requested = mode or self.mode
+        resolved = plan.resolve_mode(requested)
+        compiles0 = SW.cache_size()
+        sl = jnp.float32(self.sim_len)
+        wl_cache = {}
+
+        def built(combo, wi):
+            key = (wi, combo.shape.m, combo.shape.k, combo.shape.max_apps,
+                   combo.shape.n_childs)
+            if key not in wl_cache:
+                lanes, wl = self.workloads[wi].build(combo.shape,
+                                                     self.sim_len)
+                wl_cache[key] = (lanes, (
+                    jnp.asarray(wl[0], jnp.float32),
+                    jnp.asarray(wl[1], jnp.int32),
+                    jnp.asarray(wl[2], jnp.float32)))
+            return wl_cache[key]
+
+        t0 = time.time()
+        groups = []
+        if resolved == "pmap":
+            devs = jax.devices()
+            pending = []
+            for gi, combo in enumerate(plan.combos):
+                dev = devs[gi % len(devs)]
+                for wi in range(len(self.workloads)):
+                    lanes, (arr, gmns, lens) = built(combo, wi)
+                    args = jax.device_put((self.knobs, arr, gmns, lens, sl),
+                                          dev)
+                    out = SW._sweep(combo.shape, args[0], args[1], args[2],
+                                    args[3], args[4], combo.policy,
+                                    combo.topology)
+                    pending.append((combo, wi, lanes, lens, out))
+            for combo, wi, lanes, lens, out in pending:
+                st = jax.tree.map(np.asarray, jax.block_until_ready(out))
+                groups.append(_GroupResult(combo, wi, lanes, st,
+                                           np.asarray(lens), np.nan, None))
+        else:
+            for combo in plan.combos:
+                for wi in range(len(self.workloads)):
+                    lanes, (arr, gmns, lens) = built(combo, wi)
+                    tg = time.time()
+                    if resolved == "vmap":
+                        st = SW._sweep(combo.shape, self.knobs, arr, gmns,
+                                       lens, sl, combo.policy, combo.topology)
+                        st = jax.tree.map(np.asarray,
+                                          jax.block_until_ready(st))
+                        lane_walls = None
+                    else:
+                        st, lane_walls = _exec_seq(
+                            combo, self.knobs, arr, gmns, lens, sl)
+                    groups.append(_GroupResult(combo, wi, lanes, st,
+                                               np.asarray(lens),
+                                               time.time() - tg, lane_walls))
+        wall = time.time() - t0
+        return ResultFrame(self, plan, requested, resolved, groups, wall,
+                           SW.cache_size() - compiles0)
+
+    # -- provenance -------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {
+            "version": SPEC_VERSION,
+            "base": dataclasses.asdict(self.base),
+            "shapes": [dataclasses.asdict(s) for s in self.shapes],
+            "policies": [{"mapping": p.mapping, "beacon": p.beacon}
+                         for p in self.policies],
+            "topologies": [t.kind for t in self.topologies],
+            "queue_impls": list(self.queue_impls) if self.queue_impls
+            else None,
+            "knobs": {f: np.asarray(getattr(self.knobs, f)).tolist()
+                      for f in KNOB_FIELDS},
+            "workloads": [w.to_dict() for w in self.workloads],
+            "sim_len": float(self.sim_len),
+            "mode": self.mode,
+        }
+
+
+def _as_tuple(v):
+    return (v,) if not isinstance(v, (tuple, list)) else tuple(v)
+
+
+def spec_from_dict(d: dict) -> ExperimentSpec:
+    """Reconstruct an ExperimentSpec from its ``to_dict()`` payload (the
+    provenance round-trip; raw workloads carry only shapes + sha256 and
+    cannot be reconstructed)."""
+    from repro.core import sweep as SW
+    for w in d["workloads"]:
+        if w["kind"] == "raw":
+            raise ValueError("raw workloads serialize as provenance only "
+                             "and cannot be reconstructed")
+    return ExperimentSpec(
+        base=SimParams(**d["base"]),
+        shapes=tuple(SimShape(**s) for s in d["shapes"]),
+        policies=tuple(SimPolicy(**p) for p in d["policies"]),
+        topologies=tuple(d["topologies"]),
+        queue_impls=tuple(d["queue_impls"]) if d.get("queue_impls")
+        else None,
+        knobs=SW.knob_batch(**{f: tuple(v) if len(v) > 1 else v[0]
+                               for f, v in d["knobs"].items()}),
+        workloads=tuple(
+            WorkloadSpec(kind=w["kind"], seeds=tuple(w["seeds"]),
+                         params=tuple(sorted(
+                             (k, tuple(v) if isinstance(v, list) else v)
+                             for k, v in w["params"].items())))
+            for w in d["workloads"]),
+        sim_len=d["sim_len"],
+        mode=d["mode"])
+
+
+def _exec_seq(combo: StaticCombo, knobs: SimKnobs, arr, gmns, lens, sl):
+    """Warm replays of the single-config program — the identical
+    ``sim._run`` calls and (B, S)-stacking ``sweep(mode="seq")`` performs,
+    with per-lane wall-clock recorded (lane 0 of a fresh group carries
+    the XLA compile)."""
+    b, s = knobs.dn_th.shape[0], arr.shape[0]
+    outs, lane_walls = [], []
+    for i in range(b):
+        for j in range(s):
+            tl = time.time()
+            out = jax.block_until_ready(
+                _run(combo.shape, SimKnobs(*(leaf[i] for leaf in knobs)),
+                     arr[j], gmns[j], lens[j], sl, combo.policy,
+                     combo.topology))
+            lane_walls.append(time.time() - tl)
+            outs.append(out)
+    st = jax.tree.map(
+        lambda *leaves: np.stack(leaves).reshape((b, s) + leaves[0].shape),
+        *[jax.tree.map(np.asarray, o) for o in outs])
+    return st, lane_walls
+
+
+# --------------------------------------------------------------------------
+# Columnar results
+# --------------------------------------------------------------------------
+
+@dataclass
+class _GroupResult:
+    combo: StaticCombo
+    workload_index: int
+    lanes: list                         # per-S metadata dicts
+    state: dict                         # np leaves, (B, S, ...)
+    lengths: np.ndarray                 # (S, A, n)
+    wall_s: float
+    lane_wall_s: list | None            # B*S entries (seq mode) or None
+
+
+class ResultFrame:
+    """Columnar result set: one row per (group x knob-config x lane)
+    point, flat aligned columns for every coordinate and metric.
+
+    Point order is group-major (plan order), then workload-spec order,
+    then knob-config-major / lane-minor — i.e. each group's ``(B, S)``
+    state leaves flattened C-style, matching ``sweep``'s axis contract.
+    """
+
+    _METRICS = {
+        "mean_response": M.mean_response,
+        "beacons_tx": M.beacons,
+        "beacons_rx": M.beacons_rx,
+        "mgmt_msgs": M.mgmt_msgs,
+        "mgmt_latency": M.mgmt_latency,
+        "mgmt_proc": M.mgmt_proc,
+        "dropped": lambda st: np.asarray(st["dropped"]).astype(np.int64),
+        "events": lambda st:
+            np.asarray(st["events_processed"]).astype(np.int64),
+        "bcn_skew_sum": lambda st: np.asarray(st["bcn_skew_sum"],
+                                              np.float64),
+        "bcn_skew_max": lambda st: np.asarray(st["bcn_skew_max"],
+                                              np.float64),
+    }
+    COORDS = ("m", "k", "n_childs", "queue_cap", "max_apps", "queue_impl",
+              "mapping", "beacon", "topology")
+    LANE_COORDS = ("workload", "seed", "pair_period")
+
+    def __init__(self, spec, plan, mode_requested, mode, groups, wall_s,
+                 compiles):
+        self.spec = spec
+        self.plan = plan
+        self.mode_requested = mode_requested
+        self.mode = mode
+        self.groups = groups
+        self.wall_s = wall_s
+        self.compiles = compiles
+        self.expected_programs = plan.expected_programs(mode)
+        self._cols = None
+
+    def __len__(self):
+        b = self.spec.knobs.dn_th.shape[0]
+        return sum(b * len(g.lanes) for g in self.groups)
+
+    # -- columns ----------------------------------------------------------
+
+    def _columns(self) -> dict:
+        if self._cols is not None:
+            return self._cols
+        cols = {name: [] for name in
+                self.COORDS + self.LANE_COORDS + KNOB_FIELDS
+                + tuple(self._METRICS) + ("speedup", "lane_wall_s")}
+        b = self.spec.knobs.dn_th.shape[0]
+        knob_rows = {f: np.asarray(getattr(self.spec.knobs, f))
+                     for f in KNOB_FIELDS}
+        for g in self.groups:
+            s = len(g.lanes)
+            n = b * s
+            met = {name: np.asarray(fn(g.state)).reshape(n)
+                   for name, fn in self._METRICS.items()}
+            met["speedup"] = np.asarray(
+                M.speedup(g.state, g.lengths)).reshape(n)
+            met["lane_wall_s"] = (np.asarray(g.lane_wall_s)
+                                  if g.lane_wall_s is not None
+                                  else np.full((n,), np.nan))
+            coords = g.combo.coords()
+            for i in range(b):
+                for j in range(s):
+                    for c in self.COORDS:
+                        cols[c].append(coords[c])
+                    lane = g.lanes[j]
+                    for c in self.LANE_COORDS:
+                        cols[c].append(lane.get(c))
+                    for f in KNOB_FIELDS:
+                        cols[f].append(knob_rows[f][i].item())
+            for name in tuple(self._METRICS) + ("speedup", "lane_wall_s"):
+                cols[name].extend(met[name].tolist())
+        self._cols = {k: np.asarray(v) for k, v in cols.items()}
+        return self._cols
+
+    def col(self, name: str) -> np.ndarray:
+        """Flat (N,) column aligned across coordinates and metrics."""
+        cols = self._columns()
+        if name not in cols:
+            raise KeyError(f"unknown column {name!r}; available: "
+                           f"{sorted(cols)}")
+        return cols[name]
+
+    def mask(self, **sel) -> np.ndarray:
+        """Boolean point mask, e.g. ``frame.mask(k=16, topology="ideal")``.
+
+        Knob coordinates are stored at the simulator's float32 precision,
+        so float selectors on knob columns are rounded through float32
+        before comparing — ``frame.mask(c_s=0.1)`` matches the lane that
+        actually ran with ``float32(0.1)``."""
+        m = np.ones((len(self),), bool)
+        for k, v in sel.items():
+            if k in KNOB_FIELDS and isinstance(v, float):
+                v = np.float32(v).item()
+            m &= self.col(k) == v
+        return m
+
+    # -- named metric accessors (generated below the class: one per
+    # metric column — mean_response, speedup, beacons_tx, beacons_rx,
+    # mgmt_msgs, mgmt_latency, mgmt_proc, dropped, events, bcn_skew_*) --
+
+    def metric(self, name: str, **sel) -> np.ndarray:
+        """The (N,) metric column ``name``, optionally filtered by
+        coordinate selectors: ``frame.metric("speedup", k=16)``."""
+        col = self.col(name)
+        return col[self.mask(**sel)] if sel else col
+
+    # -- raw state access (bitwise golden gates) --------------------------
+
+    def state(self, workload_index: int = 0, **sel) -> dict:
+        """The raw (B, S, ...) final-state dict of exactly one group —
+        select by static coordinates (``k=16, topology="hier_tree",
+        mapping="round_robin", queue_impl="tree"``...).  This is the
+        bitwise surface: leaves are the very arrays the group's jitted
+        program returned."""
+        hits = [g for g in self.groups
+                if g.workload_index == workload_index
+                and all(g.combo.coords().get(k) == v
+                        for k, v in sel.items())]
+        if len(hits) != 1:
+            raise KeyError(f"state selector {sel} (workload_index="
+                           f"{workload_index}) matched {len(hits)} groups, "
+                           "need exactly 1")
+        return hits[0].state
+
+    # -- serialization (schema v4) ----------------------------------------
+
+    def rows(self) -> list:
+        """One JSON-ready dict per point (coordinates + knobs + metrics)."""
+        cols = self._columns()
+        out = []
+        for i in range(len(self)):
+            row = {}
+            for k, v in cols.items():
+                v = v[i]
+                if isinstance(v, np.generic):
+                    v = v.item()
+                if isinstance(v, float) and np.isnan(v):
+                    v = None
+                row[k] = v
+            out.append(row)
+        return out
+
+    def to_payload(self, **extra) -> dict:
+        """The benchmarks' results-JSON schema v4 core: embedded spec
+        provenance + planner/dispatch accounting + columnar rows."""
+        return {
+            "spec": self.spec.to_dict(),
+            "experiment": {
+                "mode_requested": self.mode_requested,
+                "mode": self.mode,
+                "n_groups": self.plan.n_groups,
+                "n_points": len(self),
+                "n_compiles": self.compiles,
+                "expected_programs": self.expected_programs,
+                "wall_s": self.wall_s,
+                "devices": jax.device_count(),
+            },
+            "rows": self.rows(),
+            **extra,
+        }
+
+
+def _metric_accessor(name):
+    def acc(self, **sel):
+        return self.metric(name, **sel)
+    acc.__name__ = name
+    acc.__qualname__ = f"ResultFrame.{name}"
+    acc.__doc__ = (f"Aligned (N,) ``{name}`` column; keyword coordinate "
+                   f"selectors filter points (``frame.{name}(k=16)``).")
+    return acc
+
+
+for _name in tuple(ResultFrame._METRICS) + ("speedup",):
+    setattr(ResultFrame, _name, _metric_accessor(_name))
+del _name

@@ -1,0 +1,93 @@
+"""Named metric accessors over simulator final states — the single home
+of the result-side helpers (ISSUE 5 satellite: these used to live twice,
+once unbatched in ``core/sim.py`` and once batched in ``core/sweep.py``).
+
+Every function here is shape-polymorphic: it accepts a final-state dict
+whose leaves carry any number of leading batch axes — ``()`` for a
+single ``sim.run``, ``(B, S)`` for a ``sweep``/``ExperimentSpec`` grid —
+and reduces only over the trailing per-application axis.  ``sim`` and
+``sweep`` re-export these names unchanged, so
+``repro.core.sim.speedup is repro.core.sweep.speedup is
+repro.core.metrics.speedup`` (tests/test_experiment.py).
+
+All computation is host-side numpy on materialized arrays: metrics are
+read once per experiment, after the traced hot loop has finished.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["response_times", "mean_response", "speedup", "beacons",
+           "beacons_rx", "mgmt_msgs", "mgmt_latency", "mgmt_proc"]
+
+_DONE_SENTINEL = 1e17          # app_done/app_arrive hold INF=1e18 when unset
+
+
+def response_times(state):
+    """Masked response times: (tr (..., A) with NaN where incomplete,
+    ok (..., A) completion mask)."""
+    done = np.asarray(state["app_done"])
+    arr = np.asarray(state["app_arrive"])
+    ok = (done < _DONE_SENTINEL) & (arr < _DONE_SENTINEL)
+    return np.where(ok, done - arr, np.nan), ok
+
+
+def _masked_mean(x):
+    """nanmean over the last axis without the all-NaN RuntimeWarning
+    (empty lane -> nan)."""
+    cnt = np.sum(~np.isnan(x), axis=-1)
+    tot = np.nansum(x, axis=-1)
+    return np.where(cnt > 0, tot / np.maximum(cnt, 1), np.nan)
+
+
+def mean_response(state):
+    """Mean response time over completed apps: (...,)."""
+    tr, _ = response_times(state)
+    return _masked_mean(tr)
+
+
+def speedup(state, lengths):
+    """Mean per-app speedup t_seq / t_par over completed apps: (...,).
+
+    ``lengths`` is the child-length array of the workload, (A, n) for a
+    single run or (S, A, n) for a sweep; missing leading axes broadcast
+    against the state's batch axes (a (B, S, A) grid divides the same
+    (S, A) sequential times across every knob config).
+    """
+    tr, ok = response_times(state)
+    seq = np.asarray(lengths).sum(axis=-1)          # (..., A)
+    while seq.ndim < tr.ndim:
+        seq = seq[None]
+    with np.errstate(invalid="ignore", divide="ignore"):
+        s = np.where(ok, seq / tr, np.nan)
+    return _masked_mean(s)
+
+
+def beacons(state):
+    """Transmitted status beacons: (...,) int64."""
+    return np.asarray(state["beacons_tx"]).astype(np.int64)
+
+
+def beacons_rx(state):
+    """Per-receiver beacon deliveries (non-ideal topologies): (...,)."""
+    return np.asarray(state["beacons_rx"]).astype(np.int64)
+
+
+def mgmt_msgs(state):
+    """Management messages transported (task-starts, join-exits and
+    forwards, beacon deliveries): (...,) int64."""
+    return np.asarray(state["mgmt_msgs"]).astype(np.int64)
+
+
+def mgmt_latency(state):
+    """Total management-message latency in ticks — the sum of
+    (delivery - ready) over every transported message, i.e. the
+    communication overhead of the management plane: (...,) float64."""
+    return np.asarray(state["mgmt_latency"]).astype(np.float64)
+
+
+def mgmt_proc(state):
+    """Total manager-side queueing + service latency (fork expansion,
+    stage-2 decision batches, barrier decrements) — the computation
+    overhead of the management plane: (...,) float64."""
+    return np.asarray(state["mgmt_proc"]).astype(np.float64)

@@ -736,20 +736,12 @@ def compile_cache_size() -> int:
 
 
 # --------------------------------------------------------------------------
-# Metrics
+# Metrics — single implementation in repro.core.metrics, re-exported here
+# (and from repro.core.sweep); shape-polymorphic over any leading batch
+# axes.  speedup(state, lengths) returns the masked mean per point; the
+# completion count is `response_times(state)[1].sum()`.
 # --------------------------------------------------------------------------
 
-def response_times(final_state, arrivals):
-    done = np.asarray(final_state["app_done"])
-    arr = np.asarray(final_state["app_arrive"])
-    ok = (done < 1e17) & (arr < 1e17)
-    return (done - arr)[ok], ok
-
-
-def speedup(final_state, arrivals, lengths):
-    """S = t_seq / t_par, paper Sec 5; only completed apps count."""
-    tr, ok = response_times(final_state, arrivals)
-    if len(tr) == 0:
-        return float("nan"), 0
-    seq = np.asarray(lengths).sum(axis=1)[ok[: lengths.shape[0]]]
-    return float(np.mean(seq / tr)), int(len(tr))
+from repro.core.metrics import (beacons, beacons_rx,  # noqa: E402,F401
+                                mean_response, mgmt_latency, mgmt_msgs,
+                                mgmt_proc, response_times, speedup)

@@ -24,18 +24,32 @@ the inner ``lax.while_loop`` batches as run-until-all-lanes-done with
 masked updates), "seq" replays the single-config program warm (the CPU
 path — zero recompiles across the grid).  Either way the design-space
 grid costs one compilation per (m, k) shape instead of one per point.
+
+Sweeping the *static* axes (shapes, policies, topologies, queue impls)
+lives one level up in :mod:`repro.core.experiment` (DESIGN.md §12): an
+``ExperimentSpec`` composes every axis declaratively and its planner
+calls back into this module's jitted programs, so results stay bitwise
+identical.  ``sweep_policies``/``sweep_topologies`` below are the
+deprecated pre-spec shims.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import itertools
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policies import DEFAULT_POLICY, SimPolicy, policy_grid
+# batched metrics live in repro.core.metrics (single implementation,
+# re-exported here and from repro.core.sim — tests/test_experiment.py
+# asserts both import paths resolve to the same functions)
+from repro.core.metrics import (beacons, beacons_rx, mean_response,
+                                mgmt_latency, mgmt_msgs, mgmt_proc,
+                                response_times, speedup)
 from repro.core.sim import (SimKnobs, SimParams, SimShape, _run,
                             compile_cache_size, simulate)
 from repro.core.transport import DEFAULT_TOPOLOGY, Topology, topology_grid
@@ -44,10 +58,6 @@ __all__ = ["knob_batch", "knob_product", "sweep", "sweep_policies",
            "sweep_topologies", "policy_grid", "topology_grid", "cache_size",
            "response_times", "speedup", "mean_response", "beacons",
            "beacons_rx", "mgmt_msgs", "mgmt_latency", "mgmt_proc"]
-
-
-def _as_shape(p) -> SimShape:
-    return p.shape if isinstance(p, SimParams) else p
 
 
 def knob_batch(*, c_b=8.0, c_s=8.0, c_join=8.0, dn_th=4,
@@ -102,21 +112,25 @@ def _sweep(shape, knobs, arrivals, gmns, lengths, sim_len,
 
 
 def sweep(shape, knobs: SimKnobs, workload, sim_len: float = 1e7,
-          mode: str = "auto", policy: SimPolicy = DEFAULT_POLICY,
-          topology: Topology = DEFAULT_TOPOLOGY,
+          mode: str = "auto", policy: SimPolicy | None = None,
+          topology: Topology | None = None,
           queue_impl: str | None = None):
     """Run B knob configs x S workloads with one compilation per
     (shape, policy, topology).
 
-    shape     SimShape (or SimParams, whose .shape is taken).
+    shape     SimShape, or a full SimParams — then ALL of its static
+              axes round-trip: `.shape` (incl. queue_impl), `.policy`
+              and `.topo` are taken wherever the corresponding kwarg is
+              left unset (explicit kwargs still win).
     knobs     SimKnobs with leading axis (B,) — see knob_batch/knob_product.
     workload  (arrivals (S, A), arrival_gmns (S, A), lengths (S, A, n))
               as produced by workloads.interference_batch / *_grid.
     policy    SimPolicy (mapping x beacon, core/policies.py).  Static —
               every combination is its own XLA program; sweep the policy
-              axis with :func:`sweep_policies`.
+              axis declaratively with ``experiment.ExperimentSpec``
+              (DESIGN.md §12).
     topology  Topology (fabric model, core/transport.py).  Also static —
-              sweep the fabric axis with :func:`sweep_topologies`; the
+              sweep the fabric axis via ``ExperimentSpec`` too; the
               numeric transport knobs (c_b, c_hop) stay traced.
     mode      execution strategy; results are bitwise identical across
               modes (tests/test_sweep.py):
@@ -138,7 +152,19 @@ def sweep(shape, knobs: SimKnobs, workload, sim_len: float = 1e7,
 
     Returns the final-state dict with every leaf batched to (B, S, ...).
     """
-    shape = _as_shape(shape)
+    if isinstance(shape, SimParams):
+        # round-trip every static axis of a full SimParams: policy and
+        # topology used to be silently dropped here (ISSUE 5 satellite;
+        # regression test in tests/test_sweep.py)
+        if policy is None:
+            policy = shape.policy
+        if topology is None:
+            topology = shape.topo
+        shape = shape.shape
+    if policy is None:
+        policy = DEFAULT_POLICY
+    if topology is None:
+        topology = DEFAULT_TOPOLOGY
     if queue_impl is not None and queue_impl != shape.queue_impl:
         shape = dataclasses.replace(shape, queue_impl=queue_impl)
     arrivals, gmns, lengths = workload
@@ -173,43 +199,59 @@ def sweep(shape, knobs: SimKnobs, workload, sim_len: float = 1e7,
 def sweep_policies(shape, knobs: SimKnobs, workload, policies=None,
                    sim_len: float = 1e7, mode: str = "auto",
                    topology: Topology = DEFAULT_TOPOLOGY) -> dict:
-    """The policy axis of the design space: run the (B x S) knob/workload
-    grid once per (mapping, beacon) combination.
+    """DEPRECATED shim over :mod:`repro.core.experiment` — express the
+    policy axis declaratively instead::
 
-    ``policies`` is an iterable of SimPolicy (default: the full
-    ``policy_grid()``).  Policies are static, so each combination costs
-    one compilation; the knob/workload grid inside each is free (§7).
+        ExperimentSpec(shapes=(shape,), policies=policies,
+                       knobs=knobs, workloads=(WorkloadSpec.raw(wl),),
+                       sim_len=sim_len).run()
 
-    Returns {(mapping, beacon): state dict with (B, S, ...) leaves}.
+    Returns the historical {(mapping, beacon): (B, S, ...) state dict}
+    mapping, bitwise identical (the spec path runs the same programs).
     """
-    if policies is None:
-        policies = policy_grid()
+    warnings.warn("sweep_policies is deprecated; use "
+                  "repro.core.experiment.ExperimentSpec (DESIGN.md §12)",
+                  DeprecationWarning, stacklevel=2)
+    from repro.core.experiment import ExperimentSpec, WorkloadSpec
+    policies = tuple(policies) if policies is not None \
+        else tuple(policy_grid())
+    frame = ExperimentSpec(
+        shapes=(shape,), policies=policies,
+        topologies=(Topology(topology) if isinstance(topology, str)
+                    else topology,),
+        knobs=knobs, workloads=(WorkloadSpec.raw(workload),),
+        sim_len=sim_len, mode=mode).run()
     return {(pol.mapping, pol.beacon):
-            sweep(shape, knobs, workload, sim_len, mode, policy=pol,
-                  topology=topology)
+            frame.state(mapping=pol.mapping, beacon=pol.beacon)
             for pol in policies}
 
 
 def sweep_topologies(shape, knobs: SimKnobs, workload, topologies=None,
                      sim_len: float = 1e7, mode: str = "auto",
                      policy: SimPolicy = DEFAULT_POLICY) -> dict:
-    """The fabric axis of the design space: run the (B x S) knob/workload
-    grid once per interconnect topology (DESIGN.md §10).
+    """DEPRECATED shim over :mod:`repro.core.experiment` — express the
+    fabric axis declaratively instead::
 
-    ``topologies`` is an iterable of Topology values or kind strings
-    (default: the full ``topology_grid()``).  Topologies are static, so
-    each fabric costs one compilation; the knob/workload grid inside
-    each is free.
+        ExperimentSpec(shapes=(shape,), topologies=topologies,
+                       knobs=knobs, workloads=(WorkloadSpec.raw(wl),),
+                       sim_len=sim_len).run()
 
-    Returns {kind: state dict with (B, S, ...) leaves}.
+    Returns the historical {kind: (B, S, ...) state dict} mapping,
+    bitwise identical (the spec path runs the same programs).
     """
+    warnings.warn("sweep_topologies is deprecated; use "
+                  "repro.core.experiment.ExperimentSpec (DESIGN.md §12)",
+                  DeprecationWarning, stacklevel=2)
+    from repro.core.experiment import ExperimentSpec, WorkloadSpec
     if topologies is None:
         topologies = topology_grid()
     topologies = [Topology(tp) if isinstance(tp, str) else tp
                   for tp in topologies]
-    return {tp.kind: sweep(shape, knobs, workload, sim_len, mode,
-                           policy=policy, topology=tp)
-            for tp in topologies}
+    frame = ExperimentSpec(
+        shapes=(shape,), policies=(policy,), topologies=tuple(topologies),
+        knobs=knobs, workloads=(WorkloadSpec.raw(workload),),
+        sim_len=sim_len, mode=mode).run()
+    return {tp.kind: frame.state(topology=tp.kind) for tp in topologies}
 
 
 def cache_size() -> int:
@@ -222,65 +264,6 @@ def cache_size() -> int:
     return vmap_count + compile_cache_size()
 
 
-# --------------------------------------------------------------------------
-# Batched metrics (numpy, host-side; operate on sweep() output)
-# --------------------------------------------------------------------------
-
-def response_times(state):
-    """Masked response times: returns (tr (B, S, A), ok (B, S, A))."""
-    done = np.asarray(state["app_done"])
-    arr = np.asarray(state["app_arrive"])
-    ok = (done < 1e17) & (arr < 1e17)
-    return np.where(ok, done - arr, np.nan), ok
-
-
-def _masked_mean(x):
-    """nanmean without the all-NaN RuntimeWarning (empty lane -> nan)."""
-    cnt = np.sum(~np.isnan(x), axis=-1)
-    tot = np.nansum(x, axis=-1)
-    return np.where(cnt > 0, tot / np.maximum(cnt, 1), np.nan)
-
-
-def speedup(state, lengths):
-    """Mean per-app speedup t_seq / t_par over completed apps: (B, S)."""
-    tr, ok = response_times(state)
-    seq = np.asarray(lengths).sum(axis=-1)          # (S, A)
-    with np.errstate(invalid="ignore", divide="ignore"):
-        s = np.where(ok, seq[None] / tr, np.nan)
-    return _masked_mean(s)
-
-
-def mean_response(state):
-    """Mean response time over completed apps: (B, S)."""
-    tr, _ = response_times(state)
-    return _masked_mean(tr)
-
-
-def beacons(state):
-    """Transmitted status beacons: (B, S) int64."""
-    return np.asarray(state["beacons_tx"]).astype(np.int64)
-
-
-def beacons_rx(state):
-    """Per-receiver beacon deliveries (non-ideal topologies): (B, S)."""
-    return np.asarray(state["beacons_rx"]).astype(np.int64)
-
-
-def mgmt_msgs(state):
-    """Management messages transported (task-starts, join-exits and
-    forwards, beacon deliveries): (B, S) int64."""
-    return np.asarray(state["mgmt_msgs"]).astype(np.int64)
-
-
-def mgmt_latency(state):
-    """Total management-message latency in ticks — the sum of
-    (delivery - ready) over every transported message, i.e. the
-    communication overhead of the management plane: (B, S) float64."""
-    return np.asarray(state["mgmt_latency"]).astype(np.float64)
-
-
-def mgmt_proc(state):
-    """Total manager-side queueing + service latency (fork expansion,
-    stage-2 decision batches, barrier decrements) — the computation
-    overhead of the management plane: (B, S) float64."""
-    return np.asarray(state["mgmt_proc"]).astype(np.float64)
+# Batched metrics (response_times, mean_response, speedup, beacons,
+# beacons_rx, mgmt_*) are imported from repro.core.metrics at the top of
+# this module — one implementation, re-exported here for compatibility.

@@ -31,6 +31,10 @@ from repro.core.sim import SimParams
 
 INF = 1e18
 MAX_LEN = 16_000.0
+# calibrated default stimulus period (see interference()'s docstring);
+# the single source of truth — experiment.WorkloadSpec records it as
+# the effective lane metadata when pair_period is left unset
+DEFAULT_PAIR_PERIOD = 14_000.0
 
 
 def independent_tasks(p: SimParams, *, n_apps: int = 1, length=MAX_LEN,
@@ -58,7 +62,7 @@ def interference(p: SimParams, *, sim_len: float = 2e6, lam: float = 7_999.0,
     EXPERIMENTS.md §Fig3a for the calibration sweep."""
     rng = np.random.default_rng(seed)
     if pair_period is None:
-        pair_period = 14_000.0
+        pair_period = DEFAULT_PAIR_PERIOD
     horizon = active_frac * sim_len
     n_pairs = int(horizon / pair_period)
     n_apps = min(2 * n_pairs, p.max_apps - 2)
