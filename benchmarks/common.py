@@ -33,8 +33,14 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 # ExperimentSpec that produced the numbers under a top-level "spec" key
 # (core/experiment.py; null for benchmarks that don't ride the
 # experiment engine) — every payload carries its full design-space
-# provenance (see benchmarks/README.md).
-SCHEMA_VERSION = 4
+# provenance (see benchmarks/README.md).  v5 adds the fault-injection
+# axis (DESIGN.md §13): specs may carry a "faults" list (serialized
+# FaultSpecs; SPEC_VERSION 2), rows the availability columns
+# `fault` / `msgs_lost` / `reroutes` / `downtime`, and fault-aware
+# benchmarks a top-level `determinism_digest` (sha256 over the
+# deterministic row fields, wall-clock excluded) that CI compares
+# across two runs of the same fault seed.
+SCHEMA_VERSION = 5
 
 
 def topology_meta(topologies=("ideal",), **extra) -> dict:
@@ -50,6 +56,22 @@ def topology_meta(topologies=("ideal",), **extra) -> dict:
         "topology_default": "ideal",
         **extra,
     }
+
+
+def determinism_digest(rows, exclude=("wall_s", "lane_wall_s",
+                                      "events_per_sec", "marginal_wall_s",
+                                      "us_per_call")) -> str:
+    """sha256 over the deterministic fields of a row list (schema v5).
+
+    Wall-clock columns are excluded; everything else — coordinates,
+    knobs, simulation metrics, fault counters — must be bit-identical
+    when a benchmark re-runs with the same seeds, which is exactly what
+    the CI fault-smoke job asserts by diffing two digests."""
+    import hashlib
+    clean = [{k: v for k, v in sorted(r.items()) if k not in exclude}
+             for r in rows]
+    blob = json.dumps(clean, sort_keys=True, default=float)
+    return hashlib.sha256(blob.encode()).hexdigest()
 
 
 def save(name: str, payload: dict, spec=None):

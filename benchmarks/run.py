@@ -12,7 +12,8 @@ import sys
 
 def main() -> None:
     from benchmarks import baseline_compare, fig2a, fig2b, fig3a, fig3b, table5
-    from benchmarks import moe_balance, scheduler_overhead, topology_frontier
+    from benchmarks import fault_frontier, moe_balance, scheduler_overhead
+    from benchmarks import topology_frontier
 
     print("name,us_per_call,derived")
     ok = True
@@ -31,6 +32,8 @@ def main() -> None:
     tf = topology_frontier.run(grid="tiny")
     ok &= tf["claim_clustered_lowest_total_mgmt_latency"]
     ok &= tf["claim_ideal_bitwise_vs_run"]
+    ff = fault_frontier.run(grid="tiny")
+    ok &= ff["claims_all_pass"]
     scheduler_overhead.run()
     moe_balance.run()
     print(f"# paper-claim checks {'PASS' if ok else 'FAIL'}")

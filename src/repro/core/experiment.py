@@ -39,11 +39,21 @@ bitwise identical (they run the very same traced computation):
          axes on accelerator sweeps" item).  Falls back to seq/vmap
          when ``jax.device_count() == 1``.
 
+The **faults axis** (DESIGN.md §13) rides alongside the workload axis:
+``faults=(None, FaultSpec.poisson_links(seed=0), ...)`` crosses every
+static combo with each fault scenario.  Fault schedules are *traced*
+pytrees — within a spec they are padded to one common length per
+cluster count, so a whole grid of fault seeds/intensities adds at most
+one extra compilation per group (the fault-aware program; a bare
+``None`` entry keeps the legacy no-fault program).  Each scenario
+becomes a ``fault`` coordinate column plus ``msgs_lost`` / ``reroutes``
+/ ``downtime`` metric columns (zero-filled for no-fault groups).
+
 The returned :class:`ResultFrame` is columnar — every coordinate
-(static axis value, knob value, workload lane) and every metric is a
-flat aligned column over all points — and serializes directly to the
-benchmarks' results-JSON schema v4 with the spec embedded as
-provenance (``frame.to_payload()``; benchmarks/README.md).
+(static axis value, knob value, workload lane, fault scenario) and
+every metric is a flat aligned column over all points — and serializes
+directly to the benchmarks' results-JSON schema v5 with the spec
+embedded as provenance (``frame.to_payload()``; benchmarks/README.md).
 
 Bitwise contract with the legacy entry points: a group executes through
 the very same jitted programs ``sweep`` uses (``sim._run`` in seq mode,
@@ -64,6 +74,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults as FLT
 from repro.core import metrics as M
 from repro.core import workloads as W
 from repro.core.eventq import QUEUE_IMPLS
@@ -74,7 +85,7 @@ from repro.core.transport import Topology
 __all__ = ["WorkloadSpec", "ExperimentSpec", "ExperimentPlan", "StaticCombo",
            "ResultFrame", "spec_from_dict", "SPEC_VERSION"]
 
-SPEC_VERSION = 1
+SPEC_VERSION = 2
 MODES = ("auto", "seq", "vmap", "pmap")
 WORKLOAD_KINDS = ("interference", "bursty", "hotspot", "independent", "raw")
 
@@ -247,12 +258,17 @@ class ExperimentPlan:
         """XLA programs a fresh cache compiles executing this plan:
         one per group in seq mode; in vmap/pmap mode the batched program
         is additionally specialized on the lane count S, so scenarios
-        with distinct lane counts each compile once per group."""
+        with distinct lane counts each compile once per group.  The
+        faults axis contributes at most a factor of two per group — one
+        no-fault program (``None`` entries) and one fault-aware program
+        shared by every FaultSpec (schedules are padded to one common
+        length per k, so fault-schedule grids never recompile)."""
         mode = self.resolve_mode(mode)
+        fault_programs = len({f is None for f in self.spec.faults})
         if mode == "seq":
-            return self.n_groups
+            return self.n_groups * fault_programs
         lane_shapes = {w.lane_count() for w in self.spec.workloads}
-        return self.n_groups * len(lane_shapes)
+        return self.n_groups * len(lane_shapes) * fault_programs
 
 
 # --------------------------------------------------------------------------
@@ -283,6 +299,12 @@ class ExperimentSpec:
                    (``{"dn_th": (1, 2, 4), "c_s": (8.0,)}``).
                    None -> one config from ``base``.
       workloads    WorkloadSpec tuple — the scenario/seed axis.
+      faults       fault-scenario axis (DESIGN.md §13): a tuple of
+                   ``None`` (legacy no-fault program) and/or
+                   :class:`repro.core.faults.FaultSpec` values, crossed
+                   with every group.  Schedules are traced and padded to
+                   a common length per k, so the whole axis costs at
+                   most one extra program per group.  Default (None,).
 
     ``run()`` plans, dispatches and returns a :class:`ResultFrame`.
     """
@@ -293,6 +315,7 @@ class ExperimentSpec:
     queue_impls: tuple | None = None
     knobs: object = None
     workloads: tuple = (WorkloadSpec(),)
+    faults: tuple = (None,)
     sim_len: float = 1e7
     mode: str = "auto"
 
@@ -350,6 +373,19 @@ class ExperimentSpec:
         set_("workloads", tuple(wls))
         if not self.workloads:
             raise ValueError("need at least one WorkloadSpec")
+
+        flts = self.faults
+        if flts is None or isinstance(flts, FLT.FaultSpec):
+            flts = (flts,)
+        flts = tuple(flts)
+        for f in flts:
+            if f is not None and not isinstance(f, FLT.FaultSpec):
+                raise TypeError(f"faults entries must be None or FaultSpec, "
+                                f"got {type(f).__name__}")
+        if not flts:
+            raise ValueError("faults needs at least one entry "
+                             "(use (None,) for no faults)")
+        set_("faults", flts)
         set_("sim_len", float(self.sim_len))
         if self.mode not in MODES:
             raise ValueError(f"unknown mode {self.mode!r}; "
@@ -379,6 +415,7 @@ class ExperimentSpec:
         compiles0 = SW.cache_size()
         sl = jnp.float32(self.sim_len)
         wl_cache = {}
+        f_cache = {}
 
         def built(combo, wi):
             key = (wi, combo.shape.m, combo.shape.k, combo.shape.max_apps,
@@ -392,6 +429,19 @@ class ExperimentSpec:
                     jnp.asarray(wl[2], jnp.float32)))
             return wl_cache[key]
 
+        def scheds(k):
+            # one build per (fault entry, k), padded to the axis-wide
+            # common length so every FaultSpec shares one program per
+            # group (expected_programs' no-recompile contract)
+            if k not in f_cache:
+                built_ = [None if f is None else f.build(k, self.sim_len)
+                          for f in self.faults]
+                cap = max((s.capacity for s in built_ if s is not None),
+                          default=0)
+                f_cache[k] = [None if s is None else FLT.pad_to(s, cap)
+                              for s in built_]
+            return f_cache[k]
+
         t0 = time.time()
         groups = []
         if resolved == "pmap":
@@ -401,33 +451,39 @@ class ExperimentSpec:
                 dev = devs[gi % len(devs)]
                 for wi in range(len(self.workloads)):
                     lanes, (arr, gmns, lens) = built(combo, wi)
-                    args = jax.device_put((self.knobs, arr, gmns, lens, sl),
-                                          dev)
-                    out = SW._sweep(combo.shape, args[0], args[1], args[2],
-                                    args[3], args[4], combo.policy,
-                                    combo.topology)
-                    pending.append((combo, wi, lanes, lens, out))
-            for combo, wi, lanes, lens, out in pending:
+                    for fi, f in enumerate(self.faults):
+                        kn, ar, gm, ln, sl_d, fs = jax.device_put(
+                            (self.knobs, arr, gmns, lens, sl,
+                             scheds(combo.shape.k)[fi]), dev)
+                        out = SW._sweep(combo.shape, kn, ar, gm, ln, sl_d,
+                                        combo.policy, combo.topology, fs)
+                        pending.append((combo, wi, f, lanes, lens, out))
+            for combo, wi, f, lanes, lens, out in pending:
                 st = jax.tree.map(np.asarray, jax.block_until_ready(out))
                 groups.append(_GroupResult(combo, wi, lanes, st,
-                                           np.asarray(lens), np.nan, None))
+                                           np.asarray(lens), np.nan, None,
+                                           f))
         else:
             for combo in plan.combos:
                 for wi in range(len(self.workloads)):
                     lanes, (arr, gmns, lens) = built(combo, wi)
-                    tg = time.time()
-                    if resolved == "vmap":
-                        st = SW._sweep(combo.shape, self.knobs, arr, gmns,
-                                       lens, sl, combo.policy, combo.topology)
-                        st = jax.tree.map(np.asarray,
-                                          jax.block_until_ready(st))
-                        lane_walls = None
-                    else:
-                        st, lane_walls = _exec_seq(
-                            combo, self.knobs, arr, gmns, lens, sl)
-                    groups.append(_GroupResult(combo, wi, lanes, st,
-                                               np.asarray(lens),
-                                               time.time() - tg, lane_walls))
+                    for fi, f in enumerate(self.faults):
+                        fs = scheds(combo.shape.k)[fi]
+                        tg = time.time()
+                        if resolved == "vmap":
+                            st = SW._sweep(combo.shape, self.knobs, arr,
+                                           gmns, lens, sl, combo.policy,
+                                           combo.topology, fs)
+                            st = jax.tree.map(np.asarray,
+                                              jax.block_until_ready(st))
+                            lane_walls = None
+                        else:
+                            st, lane_walls = _exec_seq(
+                                combo, self.knobs, arr, gmns, lens, sl, fs)
+                        groups.append(_GroupResult(combo, wi, lanes, st,
+                                                   np.asarray(lens),
+                                                   time.time() - tg,
+                                                   lane_walls, f))
         wall = time.time() - t0
         return ResultFrame(self, plan, requested, resolved, groups, wall,
                            SW.cache_size() - compiles0)
@@ -447,6 +503,8 @@ class ExperimentSpec:
             "knobs": {f: np.asarray(getattr(self.knobs, f)).tolist()
                       for f in KNOB_FIELDS},
             "workloads": [w.to_dict() for w in self.workloads],
+            "faults": [None if f is None else f.to_dict()
+                       for f in self.faults],
             "sim_len": float(self.sim_len),
             "mode": self.mode,
         }
@@ -456,11 +514,33 @@ def _as_tuple(v):
     return (v,) if not isinstance(v, (tuple, list)) else tuple(v)
 
 
+_SPEC_FIELDS = ("version", "base", "shapes", "policies", "topologies",
+                "queue_impls", "knobs", "workloads", "faults", "sim_len",
+                "mode")
+
+
 def spec_from_dict(d: dict) -> ExperimentSpec:
     """Reconstruct an ExperimentSpec from its ``to_dict()`` payload (the
     provenance round-trip; raw workloads carry only shapes + sha256 and
-    cannot be reconstructed)."""
+    cannot be reconstructed).
+
+    Strict: a payload field this reader does not know is an error, not
+    a silent drop — a spec written by a newer schema (say a v5 payload
+    with an axis this version cannot replay) must fail loudly instead of
+    reconstructing a spec that silently runs *different* experiments
+    than the payload records (tests/test_experiment.py)."""
     from repro.core import sweep as SW
+    unknown = set(d) - set(_SPEC_FIELDS)
+    if unknown:
+        raise ValueError(
+            f"unknown ExperimentSpec fields {sorted(unknown)}; this reader "
+            f"(SPEC_VERSION={SPEC_VERSION}) supports {sorted(_SPEC_FIELDS)} "
+            "— the payload was likely written by a newer schema and cannot "
+            "be replayed faithfully")
+    version = int(d.get("version", 1))
+    if version > SPEC_VERSION:
+        raise ValueError(f"payload has spec version {version}, this reader "
+                         f"supports <= {SPEC_VERSION}")
     for w in d["workloads"]:
         if w["kind"] == "raw":
             raise ValueError("raw workloads serialize as provenance only "
@@ -480,11 +560,14 @@ def spec_from_dict(d: dict) -> ExperimentSpec:
                              (k, tuple(v) if isinstance(v, list) else v)
                              for k, v in w["params"].items())))
             for w in d["workloads"]),
+        faults=tuple(None if f is None else FLT.FaultSpec.from_dict(f)
+                     for f in d.get("faults", [None])),
         sim_len=d["sim_len"],
         mode=d["mode"])
 
 
-def _exec_seq(combo: StaticCombo, knobs: SimKnobs, arr, gmns, lens, sl):
+def _exec_seq(combo: StaticCombo, knobs: SimKnobs, arr, gmns, lens, sl,
+              faults=None):
     """Warm replays of the single-config program — the identical
     ``sim._run`` calls and (B, S)-stacking ``sweep(mode="seq")`` performs,
     with per-lane wall-clock recorded (lane 0 of a fresh group carries
@@ -497,7 +580,7 @@ def _exec_seq(combo: StaticCombo, knobs: SimKnobs, arr, gmns, lens, sl):
             out = jax.block_until_ready(
                 _run(combo.shape, SimKnobs(*(leaf[i] for leaf in knobs)),
                      arr[j], gmns[j], lens[j], sl, combo.policy,
-                     combo.topology))
+                     combo.topology, faults))
             lane_walls.append(time.time() - tl)
             outs.append(out)
     st = jax.tree.map(
@@ -510,6 +593,15 @@ def _exec_seq(combo: StaticCombo, knobs: SimKnobs, arr, gmns, lens, sl):
 # Columnar results
 # --------------------------------------------------------------------------
 
+def _opt_leaf(st: dict, name: str, dtype) -> np.ndarray:
+    """A (B, S) scalar state leaf, or zeros of the right shape when the
+    group's program did not record it (no-fault groups lack the fault
+    counters)."""
+    v = st.get(name)
+    if v is None:
+        v = np.zeros(np.asarray(st["dropped"]).shape)
+    return np.asarray(v).astype(dtype)
+
 @dataclass
 class _GroupResult:
     combo: StaticCombo
@@ -519,6 +611,11 @@ class _GroupResult:
     lengths: np.ndarray                 # (S, A, n)
     wall_s: float
     lane_wall_s: list | None            # B*S entries (seq mode) or None
+    fault: object = None                # FaultSpec or None (no-fault)
+
+    @property
+    def fault_label(self) -> str:
+        return self.fault.label if self.fault is not None else "none"
 
 
 class ResultFrame:
@@ -526,8 +623,9 @@ class ResultFrame:
     point, flat aligned columns for every coordinate and metric.
 
     Point order is group-major (plan order), then workload-spec order,
-    then knob-config-major / lane-minor — i.e. each group's ``(B, S)``
-    state leaves flattened C-style, matching ``sweep``'s axis contract.
+    then fault-scenario order, then knob-config-major / lane-minor —
+    i.e. each group's ``(B, S)`` state leaves flattened C-style,
+    matching ``sweep``'s axis contract.
     """
 
     _METRICS = {
@@ -544,9 +642,14 @@ class ResultFrame:
                                               np.float64),
         "bcn_skew_max": lambda st: np.asarray(st["bcn_skew_max"],
                                               np.float64),
+        # availability counters (DESIGN.md §13) — zero-filled when the
+        # group ran the legacy no-fault program and the leaves are absent
+        "msgs_lost": lambda st: _opt_leaf(st, "msgs_lost", np.int64),
+        "reroutes": lambda st: _opt_leaf(st, "reroutes", np.int64),
+        "downtime": lambda st: _opt_leaf(st, "downtime", np.float64),
     }
     COORDS = ("m", "k", "n_childs", "queue_cap", "max_apps", "queue_impl",
-              "mapping", "beacon", "topology")
+              "mapping", "beacon", "topology", "fault")
     LANE_COORDS = ("workload", "seed", "pair_period")
 
     def __init__(self, spec, plan, mode_requested, mode, groups, wall_s,
@@ -586,7 +689,7 @@ class ResultFrame:
             met["lane_wall_s"] = (np.asarray(g.lane_wall_s)
                                   if g.lane_wall_s is not None
                                   else np.full((n,), np.nan))
-            coords = g.combo.coords()
+            coords = dict(g.combo.coords(), fault=g.fault_label)
             for i in range(b):
                 for j in range(s):
                     for c in self.COORDS:
@@ -638,12 +741,14 @@ class ResultFrame:
     def state(self, workload_index: int = 0, **sel) -> dict:
         """The raw (B, S, ...) final-state dict of exactly one group —
         select by static coordinates (``k=16, topology="hier_tree",
-        mapping="round_robin", queue_impl="tree"``...).  This is the
+        mapping="round_robin", queue_impl="tree", fault="none"``...;
+        ``fault`` matches the scenario label).  This is the
         bitwise surface: leaves are the very arrays the group's jitted
         program returned."""
         hits = [g for g in self.groups
                 if g.workload_index == workload_index
-                and all(g.combo.coords().get(k) == v
+                and all(dict(g.combo.coords(),
+                             fault=g.fault_label).get(k) == v
                         for k, v in sel.items())]
         if len(hits) != 1:
             raise KeyError(f"state selector {sel} (workload_index="

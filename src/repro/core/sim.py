@@ -61,6 +61,22 @@ Event types:
   BEACON_RX(src, rcv, v)  (non-ideal topologies only) the in-flight beacon
                           from GMN src reaches receiver rcv carrying load
                           summary v; rcv's view/view_t update here.
+  LINK_DOWN(i, j)         fault injection (repro.core.faults, DESIGN.md §13):
+  LINK_UP(i, j)           the directed (i, j) entry of the traced ``link_up``
+                          mask flips; UP accounts the completed outage into
+                          ``downtime``.
+  GMN_FAIL(g)             GMN g dies / recovers: the ``gmn_alive`` vector
+  GMN_HEAL(g)             flips, and management work addressed to a dead GMN
+                          re-homes to the least-loaded live GMN (min_search
+                          takeover, ``_takeover``) counting ``reroutes``.
+
+The fault machinery compiles in only when a ``FaultSchedule`` is passed
+(``faults`` is a traced pytree argument: a schedule *grid* — different
+seeds, intensities, scenarios of the same length — re-uses one XLA
+program, just like a knob grid).  With every link up and every GMN
+alive the fault-aware code paths are exact no-ops, so a run under the
+empty ``FaultSpec.none()`` schedule reproduces the frozen no-fault
+goldens bitwise (tests/test_faults.py).
 
 Deviations from the paper (documented in DESIGN.md §8): helper tasks occupy
 the management plane (GMN time) rather than PEs.  Per-receiver beacon skew
@@ -78,6 +94,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import eventq as EQ
+from repro.core import faults as FLT
 from repro.core import policies as P
 from repro.core import transport as T
 from repro.core.eventq import QUEUE_IMPLS  # noqa: F401 (re-export)
@@ -91,6 +108,17 @@ EV_ARRIVE = 0
 EV_LOCAL_SPAWN = 1
 EV_JOIN_EXIT = 2
 EV_BEACON_RX = 3
+# fault events (compiled in only when a FaultSchedule is passed);
+# EV == EV_LINK_DOWN + faults.F_* kind
+EV_LINK_DOWN = 4
+EV_LINK_UP = 5
+EV_GMN_FAIL = 6
+EV_GMN_HEAL = 7
+
+# stage-1 view tombstone for dead clusters: large enough that every
+# mapping policy's min-search avoids them, small enough that i32
+# arithmetic on the masked view cannot overflow
+_DEAD_VIEW = jnp.int32(1 << 30)
 
 
 @dataclass(frozen=True)
@@ -224,11 +252,12 @@ class _Ctx:
     __slots__ = ("m", "k", "mpk", "n_childs", "queue_cap", "max_apps",
                  "c_b", "c_s", "c_join", "dn_th", "T_b", "c_hop", "policy",
                  "topology", "hops", "ns", "record_s1", "queue_impl",
-                 "qdepth", "sel_global", "sel_local")
+                 "qdepth", "sel_global", "sel_local", "faults_on")
 
     def __init__(self, shape: SimShape, knobs: SimKnobs,
                  policy: SimPolicy = DEFAULT_POLICY,
-                 topology: Topology = DEFAULT_TOPOLOGY):
+                 topology: Topology = DEFAULT_TOPOLOGY,
+                 faults_on: bool = False):
         self.m = shape.m
         self.k = shape.k
         self.mpk = shape.mpk
@@ -251,6 +280,9 @@ class _Ctx:
         self.qdepth = EQ.tree_depth(shape.queue_cap)   # static tree depth
         self.sel_global = knobs.c_s * _log2_levels(shape.k)
         self.sel_local = knobs.c_s * _log2_levels(shape.mpk)
+        # static: whether the fault machinery (mask state, fault event
+        # branches, mask-routed message paths) is compiled in
+        self.faults_on = faults_on
 
 
 def make_state(p):
@@ -305,13 +337,30 @@ def make_state(p):
         "events_processed": jnp.zeros((), jnp.int32),
         "dropped": jnp.zeros((), jnp.int32),
     } | ({
+        # fault fabric state (repro.core.faults, DESIGN.md §13): the
+        # traced link mask + GMN liveness the message paths route
+        # through, outage-start bookkeeping, and the availability
+        # counters of the overhead decomposition.  Only present when a
+        # FaultSchedule is passed (the fault-aware program).
+        "link_up": jnp.ones((k, k), jnp.float32),     # directed, 1 = up
+        "gmn_alive": jnp.ones((k,), jnp.float32),     # 1 = alive
+        "link_down_t": jnp.zeros((k, k), jnp.float32),
+        "gmn_down_t": jnp.zeros((k,), jnp.float32),
+        "msgs_lost": jnp.zeros((), jnp.int32),    # dropped beacon deliveries
+        "reroutes": jnp.zeros((), jnp.int32),     # detours + re-homed work
+        "downtime": jnp.zeros((), jnp.float32),   # completed outage ticks
+    } if getattr(p, "faults_on", False) else {}) | ({
         # stage-1 decision trace (serving/replay.py cross-validation)
         "dec_view": jnp.zeros((A, p.ns, k), jnp.int32),
         "dec_age": jnp.zeros((A, k), jnp.float32),
         "dec_choice": jnp.zeros((A, p.ns), jnp.int32),
         "dec_rr0": jnp.zeros((A,), jnp.int32),
         "dec_t": jnp.full((A,), INF),
-    } if p.record_s1 else {})
+    } if p.record_s1 else {}) | ({
+        # under faults the deciding GMN can differ from the stimulus GMN
+        # (min_search takeover); replay needs the effective decider
+        "dec_gmn": jnp.zeros((A,), jnp.int32),
+    } if p.record_s1 and getattr(p, "faults_on", False) else {})
 
 
 # Dynamic-index updates are written as one-hot selects rather than
@@ -388,6 +437,9 @@ def _maybe_beacon(st, p, g, t):
     due = P.beacon_policy(p.policy.beacon)(
         delta, t, st["last_bcast_t"][g], dn_th=p.dn_th, T_b=p.T_b)
     fire = jnp.logical_and(due, p.k > 1)
+    if p.faults_on:
+        # a dead GMN transmits nothing (alive everywhere: exact no-op)
+        fire = jnp.logical_and(fire, st["gmn_alive"][g] > 0)
     st = dict(st)
     if p.topology.kind == "ideal":
         # bus grant: serialize on the global bus; atomic view update.
@@ -397,10 +449,29 @@ def _maybe_beacon(st, p, g, t):
         # fire ? x : old either way), so the frozen goldens still pass
         t_tx = jnp.maximum(t, st["gbus_free"]) + p.c_b
         st["gbus_free"] = jnp.where(fire, t_tx, st["gbus_free"])
+        rcv = jnp.arange(p.k) != g
+        if p.faults_on:
+            # route the atomic update through the mask: receivers behind
+            # a down (g, i) link or dead stay stale; the sender's own
+            # entry is local bookkeeping and always lands.  With the
+            # mask all-up `ok` equals the broadcast `fire`, so the
+            # stored values match the no-fault program bitwise.
+            dlv = jnp.logical_and(st["link_up"][g] > 0,
+                                  st["gmn_alive"] > 0)
+            dlv = jnp.logical_or(dlv, jnp.logical_not(rcv))
+            ok = jnp.logical_and(fire, dlv)
+            lost = jnp.logical_and(fire, jnp.logical_and(
+                rcv, jnp.logical_not(dlv)))
+            st["msgs_lost"] = st["msgs_lost"] \
+                + jnp.sum(lost).astype(jnp.int32)
+            ndlv = jnp.sum(jnp.logical_and(rcv, dlv)).astype(jnp.int32)
+        else:
+            ok = fire
+            ndlv = jnp.int32(p.k - 1)
         st["view"] = st["view"].at[:, g].set(
-            jnp.where(fire, load_g, st["view"][:, g]))
+            jnp.where(ok, load_g, st["view"][:, g]))
         st["view_t"] = st["view_t"].at[:, g].set(
-            jnp.where(fire, t_tx, st["view_t"][:, g]))
+            jnp.where(ok, t_tx, st["view_t"][:, g]))
         st["last_bcast"] = jnp.where(fire, _set1(st["last_bcast"], g, load_g),
                                      st["last_bcast"])
         st["last_bcast_t"] = jnp.where(fire,
@@ -410,7 +481,7 @@ def _maybe_beacon(st, p, g, t):
         nrcv = jnp.int32(p.k - 1)
         st["mgmt_msgs"] = st["mgmt_msgs"] + jnp.where(fire, nrcv, 0)
         st["mgmt_latency"] = st["mgmt_latency"] \
-            + jnp.where(fire, nrcv.astype(jnp.float32) * (t_tx - t), 0.0)
+            + jnp.where(fire, ndlv.astype(jnp.float32) * (t_tx - t), 0.0)
         return st
 
     # transport path: per-receiver delivery through the fabric.  The
@@ -437,7 +508,20 @@ def _beacon_fanout(st, p, g, t, fire, load_g):
         c_b=p.c_b, c_hop=p.c_hop, hops=p.hops, k=p.k)
     st["gbus_free"], st["lbus_free"] = gbus, lbus
     rcv = jnp.arange(p.k) != g                     # receiver mask
-    push = jnp.logical_and(fire, rcv)
+    if p.faults_on:
+        # best-effort beacons: a delivery whose (g, i) link is down or
+        # whose receiver is dead is dropped at injection time and
+        # counted in msgs_lost — conservation generalizes to
+        # beacons_rx + msgs_lost == (k-1) * beacons_tx.  All-up mask:
+        # dlv == rcv, every value below matches the no-fault program.
+        dlv = jnp.logical_and(rcv, jnp.logical_and(
+            st["link_up"][g] > 0, st["gmn_alive"] > 0))
+        lost = jnp.logical_and(fire,
+                               jnp.logical_and(rcv, jnp.logical_not(dlv)))
+        st["msgs_lost"] = st["msgs_lost"] + jnp.sum(lost).astype(jnp.int32)
+    else:
+        dlv = rcv
+    push = jnp.logical_and(fire, dlv)
     # track the latest pending arrival per (src, rcv); arrivals from one
     # source to one receiver are strictly increasing in send order
     # (c_b > 0 serializes the source), so earlier beacons still in the
@@ -447,7 +531,7 @@ def _beacon_fanout(st, p, g, t, fire, load_g):
     # a full 65k-element pass per event there); the stored values are
     # identical, so sweep-vs-run and vmap-vs-seq stay bitwise.
     st["bcn_t"] = st["bcn_t"].at[g].set(
-        jnp.where(jnp.logical_and(fire, rcv), t_arr, st["bcn_t"][g]))
+        jnp.where(push, t_arr, st["bcn_t"][g]))
     # the sender's own entry is bookkeeping, not a message: exact at tx
     st["view"] = st["view"].at[g, g].set(
         jnp.where(fire, load_g, st["view"][g, g]))
@@ -458,11 +542,15 @@ def _beacon_fanout(st, p, g, t, fire, load_g):
     st["last_bcast_t"] = jnp.where(fire, _set1(st["last_bcast_t"], g, t_tx),
                                    st["last_bcast_t"])
     st["beacons_tx"] = st["beacons_tx"] + jnp.where(fire, 1, 0)
-    st["mgmt_msgs"] = st["mgmt_msgs"] + jnp.sum(push).astype(jnp.int32)
+    # mgmt_msgs counts messages injected into the fabric (lost ones
+    # included); latency and skew only accrue over actual deliveries.
+    # No faults: push == fire & rcv == injected, the historical values.
+    st["mgmt_msgs"] = st["mgmt_msgs"] \
+        + jnp.sum(jnp.logical_and(fire, rcv)).astype(jnp.int32)
     st["mgmt_latency"] = st["mgmt_latency"] \
         + jnp.sum(jnp.where(push, t_arr - t, 0.0))
-    spread = jnp.maximum(jnp.max(jnp.where(rcv, t_arr, -INF))
-                         - jnp.min(jnp.where(rcv, t_arr, INF)), 0.0)
+    spread = jnp.maximum(jnp.max(jnp.where(dlv, t_arr, -INF))
+                         - jnp.min(jnp.where(dlv, t_arr, INF)), 0.0)
     st["bcn_skew_sum"] = st["bcn_skew_sum"] + jnp.where(fire, spread, 0.0)
     st["bcn_skew_max"] = jnp.maximum(st["bcn_skew_max"],
                                      jnp.where(fire, spread, 0.0))
@@ -501,26 +589,54 @@ def _handle_arrive(st, p, t, app, g, _unused, lengths):
     share = n // ns
     rem = n - share * ns
 
+    st = dict(st)
+    t_eff = t
+    if p.faults_on:
+        # hot-spare migration: a stimulus addressed to a dead GMN
+        # re-homes to the min_search takeover manager through one
+        # redirect hop.  Alive everywhere: g unchanged, zero-cost.
+        g0 = g
+        g = _takeover(st, p, g)
+        rehomed = g != g0
+        t_eff, gbus_r, lbus_r, lat_r = T.unicast(
+            p.topology, g0, g, t, rehomed, gbus=st["gbus_free"],
+            lbus=st["lbus_free"], c_b=p.c_b, c_hop=p.c_hop, hops=p.hops)
+        st["gbus_free"], st["lbus_free"] = gbus_r, lbus_r
+        st["reroutes"] = st["reroutes"] + jnp.where(rehomed, 1, 0)
+        st["mgmt_msgs"] = st["mgmt_msgs"] + jnp.where(rehomed, 1, 0)
+        st["mgmt_latency"] = st["mgmt_latency"] + lat_r
+
     # GMN compute: the critical path of the binary fork tree does
     # 2 stage-1 decisions per level (paper Eqn 3: log(n) * Omega_s(k)).
-    t_cpu = jnp.maximum(t, st["gmn_free"][g])
+    t_cpu = jnp.maximum(t_eff, st["gmn_free"][g])
     t_tree = t_cpu + 2.0 * depth * p.sel_global
-    st = dict(st)
     st["gmn_free"] = _set1(st["gmn_free"], g, t_tree)
 
     # own cluster count is exact (local data structure); remote via beacons
     own_view = _set1(st["view"][g], g, st["loads"][g].sum())
     # beacon ages feed the staleness-aware policies; own entry always fresh
-    age = _set1(jnp.maximum(t - st["view_t"][g], 0.0), g, 0.0)
+    age = _set1(jnp.maximum(t_eff - st["view_t"][g], 0.0), g, 0.0)
     # stage-1 cluster choice is the statically selected MappingPolicy
     # (core/policies.py); min_search reproduces the historical inline rule
     # bitwise (min over the view, ties from the GMN's own index)
     pick_cluster = P.mapping_policy(p.policy.mapping)
     rr0 = st["rr_ptr"][g]
+    if p.faults_on:
+        alive_b = st["gmn_alive"] > 0
+        up_row = st["link_up"][g]
 
     def pick(carry, i):
         view, st_gbus, st_lbus, rr = carry
-        c = pick_cluster(view, age, g, rr, app, i, k=p.k, T_b=p.T_b)
+        if p.faults_on:
+            # dead clusters can't accept work: tombstone their view
+            # entries so every min-search policy avoids them (the
+            # view-agnostic policies may still pick one — the spawn
+            # then re-homes at delivery).  The *policy input* is what
+            # gets recorded for replay; the carried view stays clean.
+            view_pick = jnp.where(alive_b, view, _DEAD_VIEW)
+        else:
+            view_pick = view
+        c = pick_cluster(view_pick, age, g, rr, app, i, k=p.k, T_b=p.T_b)
         cnt = share + jnp.where(i < rem, 1, 0)
         new_view = _add1(view, c, cnt)             # optimistic local bookkeeping
         # task-start message through the fabric (core/transport.py); a
@@ -529,19 +645,31 @@ def _handle_arrive(st, p, t, app, g, _unused, lengths):
         t_arr, st_gbus, st_lbus, lat = T.unicast(
             p.topology, g, c, t_tree, is_remote, gbus=st_gbus, lbus=st_lbus,
             c_b=p.c_b, c_hop=p.c_hop, hops=p.hops)
-        return (new_view, st_gbus, st_lbus, rr + 1), \
-            (c, cnt, t_arr, lat, is_remote, view)
+        outs = (c, cnt, t_arr, lat, is_remote, view_pick)
+        if p.faults_on:
+            # reliable task-start: a down (g, c) link detours (never
+            # drops); all-up the penalty is exactly 0.0
+            pen = T.link_penalty(p.topology, up_row[c], is_remote,
+                                 c_b=p.c_b, c_hop=p.c_hop)
+            outs = (c, cnt, t_arr + pen, lat + pen, is_remote, view_pick,
+                    jnp.logical_and(is_remote, up_row[c] == 0))
+        return (new_view, st_gbus, st_lbus, rr + 1), outs
 
-    (new_view, gbus, lbus, rr_out), (cs, cnts, t_arrs, lats, remotes, views) \
+    (new_view, gbus, lbus, rr_out), ys \
         = jax.lax.scan(pick, (own_view, st["gbus_free"], st["lbus_free"],
                               rr0), jnp.arange(ns))
+    if p.faults_on:
+        cs, cnts, t_arrs, lats, remotes, views, detours = ys
+        st["reroutes"] = st["reroutes"] + jnp.sum(detours).astype(jnp.int32)
+    else:
+        cs, cnts, t_arrs, lats, remotes, views = ys
     st["view"] = _set1(st["view"], g, new_view)
     st["rr_ptr"] = _set1(st["rr_ptr"], g, rr_out)
     st["gbus_free"] = gbus
     st["lbus_free"] = lbus
     st["mgmt_msgs"] = st["mgmt_msgs"] + jnp.sum(remotes).astype(jnp.int32)
     st["mgmt_latency"] = st["mgmt_latency"] + jnp.sum(lats)
-    st["mgmt_proc"] = st["mgmt_proc"] + (t_tree - t)
+    st["mgmt_proc"] = st["mgmt_proc"] + (t_tree - t_eff)
     st["app_remaining"] = _set1(st["app_remaining"], app, n)
     st["app_arrive"] = _set1(st["app_arrive"], app, t)
     if p.record_s1:
@@ -553,6 +681,9 @@ def _handle_arrive(st, p, t, app, g, _unused, lengths):
         st["dec_choice"] = _set1(st["dec_choice"], app, cs)
         st["dec_rr0"] = _set1(st["dec_rr0"], app, rr0)
         st["dec_t"] = _set1(st["dec_t"], app, t)
+        if p.faults_on:
+            # the effective decider (post-takeover) for replay
+            st["dec_gmn"] = _set1(st["dec_gmn"], app, g)
 
     return _bulk_push(st, p, jnp.ones((ns,), bool), t_arrs, EV_LOCAL_SPAWN,
                       jnp.full((ns,), app), cs, cnts)
@@ -575,6 +706,21 @@ def _handle_local_spawn(st, p, t, app, g, cnt, lengths):
     n_max = _spawn_group_bound(p)   # static; cnt <= n_max always
     shared = p.topology.kind == "shared_bus"
     st = dict(st)
+    t_eff = t
+    if p.faults_on:
+        # hot-spare migration: a spawn group delivered to a dead GMN
+        # re-homes (tasks AND management) to the min_search takeover
+        # cluster through one redirect hop
+        g0 = g
+        g = _takeover(st, p, g)
+        rehomed = g != g0
+        t_eff, gbus_r, lbus_r, lat_r = T.unicast(
+            p.topology, g0, g, t, rehomed, gbus=st["gbus_free"],
+            lbus=st["lbus_free"], c_b=p.c_b, c_hop=p.c_hop, hops=p.hops)
+        st["gbus_free"], st["lbus_free"] = gbus_r, lbus_r
+        st["reroutes"] = st["reroutes"] + jnp.where(rehomed, 1, 0)
+        st["mgmt_msgs"] = st["mgmt_msgs"] + jnp.where(rehomed, 1, 0)
+        st["mgmt_latency"] = st["mgmt_latency"] + lat_r
 
     def spawn(carry, i):
         t_cpu, bus, pe_free, loads = carry
@@ -592,7 +738,7 @@ def _handle_local_spawn(st, p, t, app, g, cnt, lengths):
         return (t_cpu, bus, pe_free, loads), \
             (pe, finish, active, jnp.where(active, t_msg - t_cpu, 0.0))
 
-    t0 = jnp.maximum(t, st["gmn_free"][g])
+    t0 = jnp.maximum(t_eff, st["gmn_free"][g])
     bus0 = st["gbus_free"] if shared else st["lbus_free"][g]
     (t_cpu, bus, pe_free, loads), (pes, finishes, actives, lats) = \
         jax.lax.scan(spawn, (t0, bus0, st["pe_free"][g], st["loads"][g]),
@@ -606,7 +752,7 @@ def _handle_local_spawn(st, p, t, app, g, cnt, lengths):
     st["loads"] = _set1(st["loads"], g, loads)
     st["mgmt_msgs"] = st["mgmt_msgs"] + jnp.sum(actives).astype(jnp.int32)
     st["mgmt_latency"] = st["mgmt_latency"] + jnp.sum(lats)
-    st["mgmt_proc"] = st["mgmt_proc"] + (t_cpu - t)
+    st["mgmt_proc"] = st["mgmt_proc"] + (t_cpu - t_eff)
 
     st = _maybe_beacon(st, p, g, t_cpu)
 
@@ -632,10 +778,23 @@ def _handle_join_exit(st, p, t, app, g, pe, lengths, parent_gmns):
     # the join barrier lives at the application's arrival GMN: remote
     # join-exits forward through the fabric (Tab 2 / Sec 4)
     pg = parent_gmns[app]
+    if p.faults_on:
+        # the barrier re-homes with its manager (min_search takeover)
+        pg0 = pg
+        pg = _takeover(st, p, pg)
+        st["reroutes"] = st["reroutes"] + jnp.where(pg != pg0, 1, 0)
     remote = pg != g
     t_fwd, gbus, lbus, lat = T.forward(
         p.topology, g, pg, t_msg, remote, gbus=st["gbus_free"],
         lbus=st["lbus_free"], c_b=p.c_b, c_hop=p.c_hop, hops=p.hops)
+    if p.faults_on:
+        # reliable join-exit forward: a down (g, pg) link detours
+        pen = T.link_penalty(p.topology, st["link_up"][g, pg], remote,
+                             c_b=p.c_b, c_hop=p.c_hop)
+        t_fwd = t_fwd + pen
+        lat = lat + pen
+        st["reroutes"] = st["reroutes"] + jnp.where(
+            jnp.logical_and(remote, st["link_up"][g, pg] == 0), 1, 0)
     st["gbus_free"], st["lbus_free"] = gbus, lbus
     st["mgmt_msgs"] = st["mgmt_msgs"] + jnp.where(remote, 1, 0)
     st["mgmt_latency"] = st["mgmt_latency"] + lat
@@ -649,20 +808,98 @@ def _handle_join_exit(st, p, t, app, g, pe, lengths, parent_gmns):
     return st
 
 
+def _takeover(st, p, g):
+    """Hot-spare manager migration (Bosch-style takeover): management
+    work addressed to a dead GMN re-homes to the live GMN with the
+    least total cluster load — a ``min_search`` over the exact load
+    sums, ties to the lowest index.  Alive GMNs keep their own work.
+    (If every GMN is dead the work degenerately lands on GMN 0; the
+    FaultSpec generators never kill GMN 0, see core/faults.py.)"""
+    alive = st["gmn_alive"] > 0
+    score = jnp.where(alive, st["loads"].sum(axis=1), _DEAD_VIEW)
+    spare = jnp.argmin(score).astype(jnp.int32)
+    return jnp.where(alive[g], g, spare)
+
+
+def _handle_link_down(st, p, t, i, j):
+    """LINK_DOWN(i, j): the directed (i, j) fabric link drops.
+    Idempotent — a DOWN on an already-down link keeps the original
+    outage start (overlapping failures merge, core/faults.py)."""
+    st = dict(st)
+    was_up = st["link_up"][i, j] > 0
+    st["link_down_t"] = st["link_down_t"].at[i, j].set(
+        jnp.where(was_up, t, st["link_down_t"][i, j]))
+    st["link_up"] = st["link_up"].at[i, j].set(0.0)
+    return st
+
+
+def _handle_link_up(st, p, t, i, j):
+    """LINK_UP(i, j): the link heals; the completed outage duration
+    lands in the ``downtime`` counter."""
+    st = dict(st)
+    was_down = st["link_up"][i, j] == 0
+    st["downtime"] = st["downtime"] + jnp.where(
+        was_down, t - st["link_down_t"][i, j], 0.0)
+    st["link_up"] = st["link_up"].at[i, j].set(1.0)
+    return st
+
+
+def _handle_gmn_fail(st, p, t, g):
+    """GMN_FAIL(g): manager g dies.  Pending work re-homes lazily — each
+    queued event addressed to g runs ``_takeover`` when it pops, so no
+    queue surgery is needed and the re-home pays its redirect cost at
+    the time the work actually moves."""
+    st = dict(st)
+    was_alive = st["gmn_alive"][g] > 0
+    st["gmn_down_t"] = st["gmn_down_t"].at[g].set(
+        jnp.where(was_alive, t, st["gmn_down_t"][g]))
+    st["gmn_alive"] = st["gmn_alive"].at[g].set(0.0)
+    return st
+
+
+def _handle_gmn_heal(st, p, t, g):
+    """GMN_HEAL(g): manager g recovers (its view ages stay stale until
+    fresh beacons arrive, which the staleness policies already price)."""
+    st = dict(st)
+    was_dead = st["gmn_alive"][g] == 0
+    st["downtime"] = st["downtime"] + jnp.where(
+        was_dead, t - st["gmn_down_t"][g], 0.0)
+    st["gmn_alive"] = st["gmn_alive"].at[g].set(1.0)
+    return st
+
+
+def _push_faults(st, p, f, sim_len):
+    """Seed the event queue with the fault schedule, grouped by kind in
+    LINK_DOWN, LINK_UP, GMN_FAIL, GMN_HEAL order (after the arrivals) —
+    a deterministic slot assignment, so same-tick ties between fault
+    and work events break identically on every run and queue impl."""
+    if f.times.shape[0] == 0:
+        return st
+    live = f.times < sim_len
+    zeros = jnp.zeros_like(f.a0)
+    for kind in range(4):
+        st = _bulk_push(st, p, jnp.logical_and(live, f.kinds == kind),
+                        f.times, EV_LINK_DOWN + kind, f.a0, f.a1, zeros)
+    return st
+
+
 def simulate(shape: SimShape, knobs: SimKnobs, arrivals, arrival_gmns,
              lengths, sim_len, policy: SimPolicy = DEFAULT_POLICY,
-             topology: Topology = DEFAULT_TOPOLOGY):
+             topology: Topology = DEFAULT_TOPOLOGY,
+             faults: FLT.FaultSchedule | None = None):
     """Traceable core: static ``shape``, ``policy`` and ``topology``,
     traced everything else.  This is what ``repro.core.sweep`` vmaps over
     knob/workload batches (one XLA program per (shape, policy, topology)
     triple)."""
-    p = _Ctx(shape, knobs, policy, topology)
+    p = _Ctx(shape, knobs, policy, topology, faults_on=faults is not None)
     st = make_state(p)
 
     n_apps = arrivals.shape[0]
     st = _bulk_push(st, p, arrivals < sim_len, arrivals, EV_ARRIVE,
                     jnp.arange(n_apps), arrival_gmns,
                     jnp.zeros((n_apps,), jnp.int32))
+    if faults is not None:
+        st = _push_faults(st, p, faults, sim_len)
 
     if p.queue_impl == "tree":
         def cond(st):
@@ -678,13 +915,21 @@ def simulate(shape: SimShape, knobs: SimKnobs, arrivals, arrival_gmns,
         lambda s, t, a: _handle_join_exit(s, p, t, a[0], a[1], a[2], lengths,
                                           arrival_gmns),
     ]
-    if topology.kind != "ideal":
+    if topology.kind != "ideal" or p.faults_on:
         # BEACON_RX exists only on the non-ideal fabrics; the ideal
         # program keeps its historical 3-branch switch (under vmap every
         # branch executes each step, so the extra branch must not tax the
-        # golden configuration)
+        # golden configuration).  With faults the branch is present even
+        # under ideal so the fault event types stay fixed at 4..7.
         branches.append(
             lambda s, t, a: _handle_beacon_rx(s, p, t, a[0], a[1], a[2]))
+    if p.faults_on:
+        branches += [
+            lambda s, t, a: _handle_link_down(s, p, t, a[0], a[1]),
+            lambda s, t, a: _handle_link_up(s, p, t, a[0], a[1]),
+            lambda s, t, a: _handle_gmn_fail(s, p, t, a[0]),
+            lambda s, t, a: _handle_gmn_heal(s, p, t, a[0]),
+        ]
 
     def body(st):
         if p.queue_impl == "tree":
@@ -710,7 +955,8 @@ def simulate(shape: SimShape, knobs: SimKnobs, arrivals, arrival_gmns,
 _run = jax.jit(simulate, static_argnums=(0, 6, 7))
 
 
-def run(p: SimParams, arrivals, arrival_gmns, lengths, sim_len: float = 1e7):
+def run(p: SimParams, arrivals, arrival_gmns, lengths, sim_len: float = 1e7,
+        faults=None):
     """arrivals (A,) f32 times (INF = unused); arrival_gmns (A,) i32;
     lengths (A, n_childs) f32 child task lengths.
 
@@ -718,12 +964,19 @@ def run(p: SimParams, arrivals, arrival_gmns, lengths, sim_len: float = 1e7):
     Compiles once per ``(p.shape, p.policy, p.topo)``; the numeric knobs
     (c_b, c_s, c_join, dn_th, T_b, c_hop) and sim_len are traced, so
     threshold/cost/period sweeps re-use the compiled program.
+
+    ``faults`` is an optional ``FaultSpec`` or prebuilt ``FaultSchedule``
+    (repro.core.faults).  The schedule is a *traced* pytree: swapping
+    schedules of the same length (a fault seed/intensity grid) re-uses
+    the compiled fault-aware program; only passing None vs a schedule —
+    or changing the schedule length — compiles a new one.
     """
     return _run(p.shape, p.knobs,
                 jnp.asarray(arrivals, jnp.float32),
                 jnp.asarray(arrival_gmns, jnp.int32),
                 jnp.asarray(lengths, jnp.float32),
-                jnp.float32(sim_len), p.policy, p.topo)
+                jnp.float32(sim_len), p.policy, p.topo,
+                FLT.as_schedule(faults, p.k, sim_len))
 
 
 def compile_cache_size() -> int:

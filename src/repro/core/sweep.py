@@ -101,11 +101,13 @@ def knob_product(*, c_b=(8.0,), c_s=(8.0,), c_join=(8.0,), dn_th=(4,),
 
 @functools.partial(jax.jit, static_argnums=(0, 6, 7))
 def _sweep(shape, knobs, arrivals, gmns, lengths, sim_len,
-           policy=DEFAULT_POLICY, topology=DEFAULT_TOPOLOGY):
+           policy=DEFAULT_POLICY, topology=DEFAULT_TOPOLOGY, faults=None):
+    # the fault schedule (repro.core.faults) is shared across all lanes:
+    # closed over rather than vmapped, like sim_len
     def per_workload(a, g, l):
         return jax.vmap(
             lambda kn: simulate(shape, kn, a, g, l, sim_len, policy,
-                                topology))(knobs)
+                                topology, faults))(knobs)
     # out_axes=1: knob-config axis stays leading, workload axis second
     return jax.vmap(per_workload, in_axes=0, out_axes=1)(
         arrivals, gmns, lengths)
@@ -114,7 +116,7 @@ def _sweep(shape, knobs, arrivals, gmns, lengths, sim_len,
 def sweep(shape, knobs: SimKnobs, workload, sim_len: float = 1e7,
           mode: str = "auto", policy: SimPolicy | None = None,
           topology: Topology | None = None,
-          queue_impl: str | None = None):
+          queue_impl: str | None = None, faults=None):
     """Run B knob configs x S workloads with one compilation per
     (shape, policy, topology).
 
@@ -149,6 +151,12 @@ def sweep(shape, knobs: SimKnobs, workload, sim_len: float = 1e7,
               are bitwise identical across impls — "tree" replaces the
               O(queue_cap) argmin per event with O(log queue_cap) tree
               repairs, the difference is wall-clock only.
+    faults    optional FaultSpec or prebuilt FaultSchedule
+              (repro.core.faults, DESIGN.md §13), shared across every
+              (knob, workload) lane.  The schedule is traced: a grid of
+              fault seeds/intensities of the same length re-uses the
+              compiled fault-aware program in both modes (zero
+              recompiles, the fault_frontier claim gate).
 
     Returns the final-state dict with every leaf batched to (B, S, ...).
     """
@@ -179,17 +187,20 @@ def sweep(shape, knobs: SimKnobs, workload, sim_len: float = 1e7,
                          "use knob_batch/knob_product")
     if isinstance(topology, str):
         topology = Topology(topology)
+    from repro.core.faults import as_schedule
+    faults = as_schedule(faults, shape.k, sim_len)
     if mode == "auto":
         mode = "seq" if jax.default_backend() == "cpu" else "vmap"
     if mode == "vmap":
         return _sweep(shape, knobs, arrivals, gmns, lengths,
-                      jnp.float32(sim_len), policy, topology)
+                      jnp.float32(sim_len), policy, topology, faults)
     if mode != "seq":
         raise ValueError(f"unknown sweep mode: {mode!r}")
     b, s = knobs.dn_th.shape[0], arrivals.shape[0]
     sl = jnp.float32(sim_len)
     outs = [_run(shape, SimKnobs(*(leaf[i] for leaf in knobs)),
-                 arrivals[j], gmns[j], lengths[j], sl, policy, topology)
+                 arrivals[j], gmns[j], lengths[j], sl, policy, topology,
+                 faults)
             for i in range(b) for j in range(s)]
     return jax.tree.map(
         lambda *leaves: jnp.stack(leaves).reshape((b, s) + leaves[0].shape),

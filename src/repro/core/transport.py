@@ -48,6 +48,17 @@ with the matrix draining to empty by the end of every run
 (tests/test_transport.py).  The wall-clock analog for the serving
 engine (``serving/engine.FleetSim``) uses :func:`host_beacon_delays`,
 stateless per-receiver delays in the same shapes.
+
+Under fault injection (repro.core.faults, DESIGN.md §13) every message
+class routes through the traced (k, k) ``link_up`` mask: beacons are
+best-effort (a down link or dead receiver drops the delivery into
+``msgs_lost``, generalizing conservation to ``beacons_rx + msgs_lost
+== (k-1) * beacons_tx``), while task-start groups and join-exit
+forwards are reliable and pay :func:`link_penalty` — a detour
+(``2 * c_hop`` on mesh2d) or retransmit grant pair (``2 * c_b``
+elsewhere) counted in ``reroutes``.  On an all-up mask every penalty is
+exactly 0.0, so the fault-aware programs reproduce the frozen goldens
+bitwise.
 """
 from __future__ import annotations
 
@@ -144,6 +155,28 @@ def forward(topo: Topology, src, dst, t_ready, is_remote, *, gbus, lbus,
     so the accounting and DESIGN.md can name the message class."""
     return unicast(topo, src, dst, t_ready, is_remote, gbus=gbus, lbus=lbus,
                    c_b=c_b, c_hop=c_hop, hops=hops)
+
+
+def link_penalty(topo: Topology, up, is_remote, *, c_b, c_hop):
+    """Extra delivery latency a *reliable* management message (task-start
+    group, join-exit forward) pays when its (src, dst) link is down
+    (DESIGN.md §13).  Reliable messages are never lost — the fabric
+    detours them:
+
+      mesh2d     the XY route is blocked; the dimension-ordered detour
+                 around the failed link costs two extra hops
+                 (``2 * c_hop``).
+      otherwise  the bus-based fabrics retransmit through the
+                 supervisor path: one extra grant pair (``2 * c_b``).
+
+    Returns the traced penalty (0.0 when the link is up, the message is
+    local, or faults are disabled) — adding it to an arrival time is an
+    exact no-op on an all-up mask, which is the bitwise no-fault
+    contract the frozen goldens ride on.  ``up`` is the (src, dst) entry
+    of the traced ``link_up`` mask."""
+    base = 2.0 * (c_hop if topo.kind == "mesh2d" else c_b)
+    hit = jnp.logical_and(is_remote, up == 0)
+    return jnp.where(hit, base, 0.0)
 
 
 def beacon_tx(topo: Topology, g, t, fire, *, gbus, lbus, c_b, c_hop, hops,

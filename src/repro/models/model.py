@@ -29,6 +29,27 @@ from repro.models.moe import moe_layer_indices
 from repro.parallel.ctx import shard_hint
 
 
+@jax.custom_vjp
+def _opt_barrier(x):
+    """``optimization_barrier`` as an identity with an explicit VJP: jax
+    0.4.x has no differentiation rule for the primitive, so grad through the
+    scan body fails without this.  Forward HLO is unchanged (still a
+    barrier); the cotangent gets the same barrier so the backward residual
+    stack keeps the same hoisting fence."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _opt_barrier_fwd(x):
+    return _opt_barrier(x), None
+
+
+def _opt_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_opt_barrier.defvjp(_opt_barrier_fwd, _opt_barrier_bwd)
+
+
 # --------------------------------------------------------------------------
 # Layer planning
 # --------------------------------------------------------------------------
@@ -238,7 +259,7 @@ def forward(params, cfg: ModelConfig, tokens, *, extra: Optional[dict] = None,
                 aux = aux + a
             # barrier: stops XLA hoisting dtype-converts of the remat-saved
             # carry into the residual stack (observed 2x activation HBM)
-            x = jax.lax.optimization_barrier(x)
+            x = _opt_barrier(x)
             return (x, aux), None
 
         xs = (params["blocks"], cross) if cross is not None else params["blocks"]

@@ -23,6 +23,14 @@ on a real fleet each ClusterScheduler runs on its pod's coordinator.
 Fault tolerance: a dead worker group's in-flight requests re-enter the
 global queue (map-once applies to healthy placement, not failure
 recovery); its load column is tombstoned so min-search never picks it.
+The same contract extends to the management fabric (DESIGN.md §13):
+``fail_link``/``heal_link`` drop beacon deliveries on a directed (src,
+rcv) link mask, ``fail_gmn``/``heal_gmn`` take a whole cluster
+scheduler down — placements that would land on a dead manager re-home
+to the least-loaded live one (the ``min_search`` takeover, mirroring
+``core/sim._takeover``), beacons from/to it are lost, and the
+``msgs_lost`` / ``reroutes`` / ``downtime`` counters account the damage
+exactly like the tick-domain simulator's fault leaves.
 """
 from __future__ import annotations
 
@@ -184,18 +192,49 @@ class FleetSim:
         self.t = 0.0
         self._counter = itertools.count()
         self._seq = itertools.count()   # heap tie-breaker
+        # management-fabric fault state (DESIGN.md §13), the wall-clock
+        # analog of the tick-domain link_up/gmn_alive leaves
+        self.link_up = np.ones((k, k), bool)
+        self.gmn_alive = np.ones(k, bool)
+        self.msgs_lost = 0
+        self.reroutes = 0
+        self.downtime = 0.0             # completed outages (heal-accounted)
+        self._link_down_t = np.zeros((k, k), np.float64)
+        self._gmn_down_t = np.zeros(k, np.float64)
+
+    def _takeover(self, c: int) -> int:
+        """The live GMN a dead cluster's management work re-homes to:
+        ``min_search`` over alive total loads, lowest index on ties —
+        the wall-clock mirror of ``core/sim._takeover``."""
+        if self.gmn_alive[c]:
+            return c
+        alive = np.nonzero(self.gmn_alive)[0]
+        if alive.size == 0:
+            raise RuntimeError("every GMN is dead; heal one first")
+        loads = np.array([self.schedulers[a].total_load() for a in alive])
+        return int(alive[int(np.argmin(loads))])
 
     def submit(self, req: Request, via_cluster: Optional[int] = None):
         entry = via_cluster if via_cluster is not None \
             else next(self._counter) % self.k
+        entry0 = entry
+        entry = self._takeover(entry)       # dead entry GMN: hot-spare homes
         sched = self.schedulers[entry]
         target = sched.pick_cluster(self.t, req.rid)  # stage 1 (stale view ok)
+        target0 = target
+        target = self._takeover(target)     # dead pick: re-home at delivery
+        if target != target0 or entry != entry0:
+            self.reroutes += 1
+        elif not self.link_up[entry, target] and entry != target:
+            self.reroutes += 1              # task-start detoured, never lost
         tsched = self.schedulers[target]
         g = tsched.place_local(req)                 # stage 2 (exact)
         self.active.setdefault((target, g), []).append(req)
         self._broadcast(tsched)
 
     def _broadcast(self, sched: ClusterScheduler):
+        if not self.gmn_alive[sched.cid]:
+            return                          # dead managers don't beacon
         msg = sched.maybe_beacon(self.t)
         if msg is not None:
             self.beacons_tx += 1
@@ -204,6 +243,12 @@ class FleetSim:
                                           c_hop=self.hop_delay)
             for s in self.schedulers:
                 if s.cid == sched.cid:
+                    continue
+                # best-effort: a down (src, rcv) link or dead receiver
+                # drops the delivery at injection time (DESIGN.md §13)
+                if not self.link_up[sched.cid, s.cid] \
+                        or not self.gmn_alive[s.cid]:
+                    self.msgs_lost += 1
                     continue
                 d = float(delays[s.cid])
                 if d <= 0.0:
@@ -262,6 +307,57 @@ class FleetSim:
             r.cluster = r.group = -1
             self.submit(r)
         return len(orphans)
+
+    # -- management-fabric faults (DESIGN.md §13) ---------------------------
+
+    def fail_link(self, src: int, dst: int, *, symmetric: bool = True):
+        """Take the directed beacon link src -> dst down (and dst -> src
+        with ``symmetric``).  Idempotent; beacons injected while down are
+        lost, task-start placements detour (``reroutes``)."""
+        pairs = ((src, dst), (dst, src)) if symmetric else ((src, dst),)
+        for i, j in pairs:
+            if self.link_up[i, j]:
+                self.link_up[i, j] = False
+                self._link_down_t[i, j] = self.t
+
+    def heal_link(self, src: int, dst: int, *, symmetric: bool = True):
+        """Re-raise a failed link; the completed outage adds to
+        ``downtime``.  Healing an up link is a no-op."""
+        pairs = ((src, dst), (dst, src)) if symmetric else ((src, dst),)
+        for i, j in pairs:
+            if not self.link_up[i, j]:
+                self.link_up[i, j] = True
+                self.downtime += self.t - self._link_down_t[i, j]
+
+    def fail_gmn(self, cluster: int):
+        """Take a whole cluster's manager down: it stops beaconing, its
+        pending (queued-but-unplaced) management work re-homes to the
+        least-loaded live GMN, and placements that would land on it
+        detour through :meth:`_takeover`.  Its worker groups keep
+        decoding — a manager failure is a control-plane outage, not a
+        data-plane one (matching ``core/sim``'s GMN_FAIL semantics)."""
+        if not self.gmn_alive[cluster]:
+            return 0
+        if not self.gmn_alive.sum() > 1:
+            raise RuntimeError("cannot fail the last live GMN")
+        self.gmn_alive[cluster] = False
+        self._gmn_down_t[cluster] = self.t
+        rehomed = [r for r in self.queue if r.cluster == cluster]
+        for r in rehomed:
+            self.queue.remove(r)
+            r.cluster = r.group = -1
+            self.reroutes += 1
+            self.submit(r)
+        return len(rehomed)
+
+    def heal_gmn(self, cluster: int):
+        """Bring a failed manager back.  Its exact local table was never
+        lost (workers kept running); the outage adds to ``downtime`` and
+        the healed GMN re-enters beacon rotation on the next tick."""
+        if self.gmn_alive[cluster]:
+            return
+        self.gmn_alive[cluster] = True
+        self.downtime += self.t - self._gmn_down_t[cluster]
 
     def loads(self) -> np.ndarray:
         return np.stack([s.local for s in self.schedulers])

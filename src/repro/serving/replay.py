@@ -63,7 +63,13 @@ class ReplayReport:
 
 def decision_trace(state, arrival_gmns) -> list[Decision]:
     """Extract the recorded stage-1 decisions from a ``record_s1=True``
-    final state, in application order (completed ARRIVEs only)."""
+    final state, in application order (completed ARRIVEs only).
+
+    Under fault injection the deciding GMN can differ from the arrival
+    GMN — a dead manager's work re-homes via the ``min_search`` takeover
+    (DESIGN.md §13) — so fault-aware runs record the post-takeover
+    decider in ``dec_gmn`` and the trace prefers it; no-fault states
+    fall back to ``arrival_gmns`` unchanged."""
     if "dec_choice" not in state:
         raise ValueError("state has no decision trace; run the simulator "
                          "with record_s1=True (SimParams/SimShape)")
@@ -73,7 +79,8 @@ def decision_trace(state, arrival_gmns) -> list[Decision]:
     choices = np.asarray(state["dec_choice"])
     rr0 = np.asarray(state["dec_rr0"])
     ts = np.asarray(state["dec_t"])
-    gmns = np.asarray(arrival_gmns)
+    dec_gmn = state.get("dec_gmn")
+    gmns = np.asarray(dec_gmn if dec_gmn is not None else arrival_gmns)
     ns = choices.shape[1]
     out = []
     for app in np.nonzero(arr < 1e17)[0]:

@@ -361,3 +361,71 @@ def test_scenario_axis_multiple_workload_specs():
     assert frame.col("workload").tolist() == ["interference", "hotspot"]
     st_hot = frame.state(workload_index=1)
     assert np.asarray(st_hot["events_processed"]).sum() > 0
+
+
+# --------------------------------------------------------------------------
+# Faults axis (DESIGN.md §13) and the strict schema-v5 reader
+# --------------------------------------------------------------------------
+
+def test_faults_axis_crosses_groups_and_fills_metrics():
+    """The faults axis crosses every group, adds at most one extra
+    program per group (schedules padded to one length per k), labels the
+    ``fault`` coordinate, and zero-fills the availability metrics on
+    no-fault rows."""
+    from repro.core.faults import FaultSpec
+    # m=12/k=4 with queue_cap=320 is used nowhere else in the suite, so
+    # the jit cache cannot have the no-fault program for this combo warm
+    p = SimParams(m=12, k=4, n_childs=6, max_apps=16, queue_cap=320)
+    spec = ExperimentSpec(
+        base=p, shapes=(4,), topologies=("hier_tree",),
+        knobs={"dn_th": (2,)},
+        workloads=(WorkloadSpec(seeds=(0,)),),
+        faults=(None,
+                FaultSpec.poisson_links(rate=3e-4, repair=3e4, seed=2),
+                FaultSpec.partition(t_down=8e4, t_heal=1.5e5, name="part")),
+        sim_len=2e5, mode="seq")
+    frame = spec.run()
+    assert frame.compiles == frame.expected_programs == 2
+    assert sorted(set(frame.col("fault"))) \
+        == ["none", "part", "poisson_links"]
+    assert (frame.msgs_lost(fault="none") == 0).all()
+    assert frame.msgs_lost(fault="poisson_links").sum() > 0
+    assert (frame.downtime(fault="part") > 0).all()
+    # the no-fault group is the bitwise anchor: same leaves as a bare run
+    wl = W.interference_batch(p, seeds=(0,), sim_len=2e5)
+    st = SW.sweep(p.shape, SW.knob_batch(dn_th=(2,)), wl, 2e5,
+                  topology="hier_tree")
+    anchor = frame.state(topology="hier_tree", fault="none")
+    for key in ("app_done", "beacons_tx", "beacons_rx"):
+        assert np.array_equal(np.asarray(st[key]), anchor[key]), key
+
+
+def test_faults_axis_roundtrips_and_validates():
+    from repro.core.faults import FaultSpec
+    spec = ExperimentSpec(
+        base=_params(), shapes=(4,), knobs={"dn_th": (2,)},
+        faults=(None, FaultSpec.gmn_churn(rate=1e-5, seed=3)),
+        sim_len=1e5)
+    spec2 = E.spec_from_dict(spec.to_dict())
+    assert spec2.faults == spec.faults
+    with pytest.raises(TypeError):
+        ExperimentSpec(base=_params(), faults=("poisson_links",))
+    # v1 payloads (no faults key) default to the no-fault axis
+    d = spec.to_dict()
+    del d["faults"]
+    assert E.spec_from_dict(d).faults == (None,)
+
+
+def test_spec_from_dict_rejects_unknown_fields():
+    """Regression (ISSUE 6 satellite): a payload written by a newer
+    schema — e.g. a v5 results file with an axis this reader does not
+    know — must error loudly, not silently reconstruct a spec that runs
+    different experiments than the payload records."""
+    spec = ExperimentSpec(base=_params(), shapes=(4,),
+                          knobs={"dn_th": (2,)}, sim_len=1e5)
+    d = spec.to_dict()
+    assert E.spec_from_dict(d) is not None          # clean payload reads
+    with pytest.raises(ValueError, match="thermal_model"):
+        E.spec_from_dict(dict(d, thermal_model="on"))
+    with pytest.raises(ValueError, match="version"):
+        E.spec_from_dict(dict(d, version=E.SPEC_VERSION + 1))

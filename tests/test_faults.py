@@ -1,0 +1,226 @@
+"""Chaos harness for the fault-injection subsystem (core/faults.py,
+DESIGN.md §13): the bitwise no-fault anchor against the frozen PR-2 and
+PR-4 goldens, seq/vmap reproducibility under faults, the generalized
+beacon-conservation law ``rx + lost == (k-1) * tx``, partition-and-heal
+drain, exact downtime accounting, GMN takeover re-homing, seeded
+determinism, and the no-recompile contract for fault-schedule grids."""
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core import sweep as SW
+from repro.core import workloads as W
+from repro.core.faults import FaultSchedule, FaultSpec, pad_to
+from repro.core.sim import SimParams, run
+
+from test_sweep import _GOLDEN_APP_DONE_SHA, _GOLDEN_BEACONS, THRESHOLDS
+
+
+def _params(k=4, **kw):
+    kw.setdefault("m", 16)
+    kw.setdefault("n_childs", 16)
+    kw.setdefault("max_apps", 32)
+    kw.setdefault("queue_cap", 512)
+    return SimParams(k=k, **kw)
+
+
+NON_IDEAL = ("shared_bus", "hier_tree", "mesh2d")
+
+
+# -- the bitwise no-fault contract ------------------------------------------
+
+@pytest.mark.parametrize("queue_impl", ["linear", "tree"])
+def test_none_faults_reproduce_frozen_goldens_bitwise(queue_impl):
+    """Compiling the fault machinery in with zero events (FaultSpec.none())
+    must reproduce the PR-2 frozen golden grid — and the PR-4 tree-queue
+    capture — bitwise: on an all-up mask every fault code path is an
+    exact no-op."""
+    p = _params(queue_impl=queue_impl)
+    wl = W.interference_batch(p, seeds=(0, 1), sim_len=3e5)
+    st = SW.sweep(p.shape, SW.knob_batch(dn_th=THRESHOLDS), wl, 3e5,
+                  faults=FaultSpec.none())
+    assert np.asarray(st["beacons_tx"]).tolist() == _GOLDEN_BEACONS
+    done = np.asarray(st["app_done"], np.float32)
+    assert hashlib.sha256(done.tobytes()).hexdigest() == _GOLDEN_APP_DONE_SHA
+    assert int(np.asarray(st["msgs_lost"]).sum()) == 0
+    assert int(np.asarray(st["reroutes"]).sum()) == 0
+    assert float(np.asarray(st["downtime"]).sum()) == 0.0
+
+
+def test_none_faults_match_no_faults_run_bitwise():
+    """run(faults=FaultSpec.none()) equals run(faults=None) bitwise on
+    every shared state leaf, on every topology."""
+    for topology in ("ideal",) + NON_IDEAL:
+        p = _params(topology=topology)
+        wl = W.interference(p, seed=0, sim_len=2e5)
+        st0 = run(p, *wl, 2e5)
+        st1 = run(p, *wl, 2e5, faults=FaultSpec.none())
+        for leaf in st0:
+            a, b = np.asarray(st0[leaf]), np.asarray(st1[leaf])
+            assert a.tobytes() == b.tobytes(), (topology, leaf)
+
+
+# -- reproducibility --------------------------------------------------------
+
+def test_seq_vmap_bitwise_under_faults():
+    """The dispatch mode must not change faulty results: seq and vmap
+    sweeps under the same fault schedule agree bitwise on every leaf."""
+    p = _params(topology="hier_tree")
+    wl = W.interference_batch(p, seeds=(0,), sim_len=2e5)
+    kn = SW.knob_batch(dn_th=(2, 8))
+    fs = FaultSpec.poisson_links(rate=2e-4, repair=2e4, seed=3)
+    a = SW.sweep(p.shape, kn, wl, 2e5, mode="seq", topology="hier_tree",
+                 faults=fs)
+    b = SW.sweep(p.shape, kn, wl, 2e5, mode="vmap", topology="hier_tree",
+                 faults=fs)
+    assert int(np.asarray(a["msgs_lost"]).sum()) > 0
+    for key in a:
+        assert np.array_equal(np.asarray(a[key]), np.asarray(b[key])), key
+
+
+def test_same_fault_seed_bitwise_same_different_seed_differs():
+    """Seeded fault generators are deterministic: the same seed gives
+    bitwise-identical runs, a different seed a different fabric history."""
+    p = _params(topology="mesh2d")
+    wl = W.interference(p, seed=1, sim_len=3e5)
+    mk = lambda s: FaultSpec.poisson_links(rate=2e-4, repair=2e4, seed=s)
+    st_a = run(p, *wl, 3e5, faults=mk(5))
+    st_b = run(p, *wl, 3e5, faults=mk(5))
+    st_c = run(p, *wl, 3e5, faults=mk(6))
+    for leaf in st_a:
+        assert np.asarray(st_a[leaf]).tobytes() \
+            == np.asarray(st_b[leaf]).tobytes(), leaf
+    assert any(np.asarray(st_a[leaf]).tobytes()
+               != np.asarray(st_c[leaf]).tobytes() for leaf in st_a)
+
+
+# -- conservation under loss ------------------------------------------------
+
+@pytest.mark.parametrize("topology", NON_IDEAL)
+def test_beacon_conservation_generalizes_under_faults(topology):
+    """Every fired beacon either arrives or is counted lost:
+    ``beacons_rx + msgs_lost == (k-1) * beacons_tx``, with the in-flight
+    matrix drained and loss actually exercised (msgs_lost > 0)."""
+    p = _params(topology=topology, dn_th=1)
+    wl = W.interference(p, seed=0, sim_len=3e5)
+    fs = FaultSpec.poisson_links(rate=3e-4, repair=3e4, seed=2)
+    st = run(p, *wl, 3e5, faults=fs)
+    tx, rx = int(st["beacons_tx"]), int(st["beacons_rx"])
+    lost = int(st["msgs_lost"])
+    assert tx > 0 and lost > 0
+    assert rx + lost == (p.k - 1) * tx, (rx, lost, tx)
+    assert (np.asarray(st["bcn_t"]) >= 1e17).all(), \
+        "in-flight matrix must drain"
+    assert int(st["dropped"]) == 0
+
+
+def test_partition_and_heal_drains_and_completes():
+    """A mesh2d fabric partition loses cross-cut beacons while down, the
+    reliable control messages keep every application completing, the
+    in-flight matrix drains after the heal, and downtime equals the cut
+    size times the outage exactly."""
+    p = _params(topology="mesh2d", dn_th=1)
+    wl = W.interference(p, seed=0, sim_len=3e5)
+    t_down, t_heal = 8e4, 1.5e5
+    fs = FaultSpec.partition(t_down=t_down, t_heal=t_heal)
+    st = run(p, *wl, 3e5, faults=fs)
+    tx, rx = int(st["beacons_tx"]), int(st["beacons_rx"])
+    lost = int(st["msgs_lost"])
+    assert lost > 0
+    assert rx + lost == (p.k - 1) * tx
+    assert (np.asarray(st["bcn_t"]) >= 1e17).all(), \
+        "in-flight matrix must drain after the heal"
+    # every arrived application still completes (reliable control plane)
+    arr = np.asarray(st["app_arrive"])
+    done = np.asarray(st["app_done"])
+    assert (done[arr < 1e17] < 1e17).all()
+    # cut = 2 GMNs vs 2 GMNs, both directions: 8 directed links
+    assert float(st["downtime"]) == 8 * (t_heal - t_down)
+    assert (np.asarray(st["link_up"]) == 1.0).all()
+
+
+def test_gmn_churn_rehomes_work_and_completes():
+    """Scripted GMN failures re-home arrivals to live managers (the
+    min_search takeover recorded in dec_gmn) and every application still
+    completes; healed GMNs return to service."""
+    p = _params(topology="hier_tree", record_s1=True, dn_th=2)
+    wl = W.interference(p, seed=1, sim_len=3e5)
+    fs = FaultSpec.scripted([
+        (4e4, "gmn_fail", 1, 0), (5e4, "gmn_fail", 3, 0),
+        (1.6e5, "gmn_heal", 1, 0), (2.1e5, "gmn_heal", 3, 0)])
+    st = run(p, *wl, 3e5, faults=fs)
+    arr = np.asarray(st["app_arrive"])
+    done_mask = arr < 1e17
+    assert (np.asarray(st["app_done"])[done_mask] < 1e17).all()
+    # some arrivals landed on a dead GMN and were taken over
+    rehomed = np.asarray(st["dec_gmn"])[done_mask] \
+        != np.asarray(wl[1])[done_mask]
+    assert rehomed.sum() > 0
+    assert int(st["reroutes"]) > 0
+    assert (np.asarray(st["gmn_alive"]) == 1.0).all()
+    # takeover targets were alive at decision time
+    assert float(st["downtime"]) == (1.6e5 - 4e4) + (2.1e5 - 5e4)
+
+
+def test_downtime_counts_completed_outages_only():
+    """downtime is accounted at the heal: an outage still open at the
+    end of the run contributes nothing, overlapping failures merge."""
+    p = _params(topology="hier_tree")
+    wl = W.interference(p, seed=0, sim_len=2e5)
+    fs = FaultSpec.scripted([
+        (1e4, "link_down", 0, 1), (3e4, "link_down", 0, 1),   # merges
+        (5e4, "link_up", 0, 1), (6e4, "link_up", 0, 1),       # idempotent
+        (9e4, "link_down", 2, 3)])                            # never heals
+    st = run(p, *wl, 2e5, faults=fs)
+    assert float(st["downtime"]) == 5e4 - 1e4
+    up = np.asarray(st["link_up"])
+    assert up[0, 1] == 1.0 and up[2, 3] == 0.0
+
+
+# -- compile behavior -------------------------------------------------------
+
+def test_fault_schedule_grid_does_not_recompile():
+    """Fault schedules are traced: a grid of seeds/intensities with one
+    schedule length re-uses the compiled fault-aware program (the
+    fault_frontier no-recompile claim)."""
+    p = _params(m=8, k=2, n_childs=4, max_apps=8, queue_cap=128)
+    wl = W.independent_batch(p, seeds=(0,), n_apps=1)
+    kn = SW.knob_batch(dn_th=(1, 2))
+    SW.sweep(p.shape, kn, wl, 1e5,
+             faults=FaultSpec.poisson_links(rate=1e-3, seed=0))
+    c0 = SW.cache_size()
+    for seed in (1, 2, 3):
+        SW.sweep(p.shape, kn, wl, 1e5,
+                 faults=FaultSpec.poisson_links(rate=2e-3, seed=seed))
+    assert SW.cache_size() == c0
+
+
+# -- spec construction and serialization ------------------------------------
+
+def test_faultspec_validation_and_padding():
+    with pytest.raises(ValueError):
+        FaultSpec(kind="meteor_strike")
+    with pytest.raises(ValueError):
+        FaultSpec.scripted([(1.0, "flood", 0, 1)])
+    with pytest.raises(ValueError):
+        FaultSpec.scripted([(1.0, "link_down", 9, 0)]).build(4, 1e5)
+    sched = FaultSpec.partition(t_down=1e3).build(4, 1e5)
+    padded = pad_to(sched, sched.capacity + 5)
+    assert padded.capacity == sched.capacity + 5
+    assert np.all(np.asarray(padded.times[sched.capacity:]) >= 1e17)
+    with pytest.raises(ValueError):
+        pad_to(padded, 1)
+    assert isinstance(sched, FaultSchedule)
+
+
+def test_faultspec_dict_roundtrip_rejects_unknown_fields():
+    """from_dict is strict — an unknown field errors instead of being
+    silently dropped (the schema-v5-payload-in-old-reader regression)."""
+    fs = FaultSpec.poisson_links(rate=5e-4, repair=1e4, seed=7, name="x")
+    assert FaultSpec.from_dict(fs.to_dict()) == fs
+    sc = FaultSpec.scripted([(1.0, "gmn_fail", 1, 0)])
+    assert FaultSpec.from_dict(sc.to_dict()) == sc
+    bad = dict(fs.to_dict(), blast_radius=2)
+    with pytest.raises(ValueError, match="blast_radius"):
+        FaultSpec.from_dict(bad)

@@ -94,3 +94,28 @@ def test_replay_trace_drives_fleetsim_end_to_end():
     assert len(fleet.finished) == n_apps
     assert not fleet.active and not fleet.pending
     assert fleet.loads().sum() == pytest.approx(0.0, abs=1e-9)
+
+
+def test_faulty_run_replays_at_full_agreement():
+    """The chaos cross-check (DESIGN.md §13): a recorded tick-domain run
+    under GMN churn and link failures — takeover re-homing included —
+    replays through the wall-clock scheduler at 100% decision agreement.
+    ``dec_gmn`` records the post-takeover decider and ``dec_view`` the
+    dead-masked view the policy actually saw, so the host adapter faces
+    exactly the same inputs."""
+    from repro.core.faults import FaultSpec
+    p = _params("min_search", topology="hier_tree", dn_th=2)
+    wl = W.interference(p, sim_len=3e5, seed=1)
+    fs = FaultSpec.scripted([
+        (4e4, "gmn_fail", 1, 0), (5e4, "gmn_fail", 3, 0),
+        (1.6e5, "gmn_heal", 1, 0), (2.1e5, "gmn_heal", 3, 0),
+        (6e4, "link_down", 0, 2), (1.2e5, "link_up", 0, 2)])
+    st = run(p, *wl, 3e5, faults=fs)
+    state = {k: np.asarray(v) for k, v in st.items()}
+    done = state["app_arrive"] < 1e17
+    rehomed = (state["dec_gmn"][done] != np.asarray(wl[1])[done]).sum()
+    assert rehomed > 0, "churn must actually re-home some arrivals"
+    trace = R.decision_trace(state, wl[1])
+    assert len(trace) > 50
+    report = R.replay_decisions(trace, p)
+    assert report.agreement == 1.0, report.mismatches[:3]

@@ -142,3 +142,66 @@ def test_scheduler_message_log_types():
     kinds = {m.type for m in s.tx_log}
     assert MsgType.TASK_START in kinds
     assert MsgType.STATUS_BEACON in kinds
+
+
+# -- management-fabric faults (DESIGN.md §13) -------------------------------
+
+def test_fabric_kill_then_heal_loses_no_request():
+    """Link and GMN failures mid-stream: every submitted request still
+    finishes, losses and detours are counted, and after healing the
+    beacon-conservation law holds once the fabric drains."""
+    fleet = FleetSim(k=4, groups_per_cluster=4, dn_th=1)
+    rid = 0
+    def pump(n):
+        nonlocal rid
+        for _ in range(n):
+            fleet.submit(Request(sort_key=fleet.t, rid=rid, max_new=8))
+            rid += 1
+            fleet.tick()
+    pump(40)
+    fleet.fail_link(0, 1)
+    fleet.fail_gmn(2)
+    pump(40)
+    fleet.heal_link(0, 1)
+    fleet.heal_gmn(2)
+    pump(40)
+    for _ in range(5000):
+        if not fleet.active:
+            break
+        fleet.tick()
+    assert len(fleet.finished) == rid, "no request may be lost"
+    assert fleet.msgs_lost > 0 and fleet.reroutes > 0
+    assert fleet.downtime > 0
+    assert fleet.beacons_rx + fleet.msgs_lost \
+        == (fleet.k - 1) * fleet.beacons_tx
+    assert fleet.gmn_alive.all() and fleet.link_up.all()
+
+
+def test_dead_gmn_receives_no_placements_and_heals_back():
+    """While a manager is down nothing places on its cluster (min_search
+    takeover re-homes stage-1 picks); after the heal it serves again."""
+    fleet = FleetSim(k=3, groups_per_cluster=2, dn_th=1)
+    fleet.fail_gmn(1)
+    for i in range(12):
+        fleet.submit(Request(sort_key=fleet.t, rid=i, max_new=4))
+        fleet.tick()
+    assert all(key[0] != 1 for key in fleet.active), \
+        "dead cluster must not receive work"
+    assert fleet.reroutes > 0
+    fleet.heal_gmn(1)
+    for i in range(12, 48):
+        fleet.submit(Request(sort_key=fleet.t, rid=i, max_new=4))
+        fleet.tick()
+    assert any(key[0] == 1 for key in fleet.active) \
+        or any(r.cluster == 1 for r in fleet.finished)
+
+
+def test_fail_gmn_guards():
+    fleet = FleetSim(k=2, groups_per_cluster=2, dn_th=1)
+    fleet.fail_gmn(0)
+    fleet.fail_gmn(0)                    # idempotent
+    with pytest.raises(RuntimeError):
+        fleet.fail_gmn(1)                # never kill the last live GMN
+    fleet.heal_gmn(0)
+    fleet.heal_gmn(0)                    # idempotent
+    assert fleet.gmn_alive.all()
